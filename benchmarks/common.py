@@ -1,0 +1,52 @@
+"""Shared benchmark utilities: timing, CSV emission, and the four paper
+workloads (Table 1) as calibrated synthetic sparsity profiles.
+
+The paper's embedding tables are 23–406M gradients; CPU benchmarks use a
+SCALE-fraction of each tensor with the same density/skew (documented in the
+`scaled_elems` column) — volumes scale linearly, ratios are scale-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics
+
+# Table 1 of the paper: (embedding gradient words, density)
+PAPER_MODELS = {
+    "lstm": dict(elems=406_000_000 // 4, density=0.0113),
+    "deepfm": dict(elems=214_000_000, density=0.0280),
+    "nmt": dict(elems=112_000_000 // 4, density=0.0247),
+    "bert": dict(elems=23_000_000 // 4, density=0.0106),
+}
+SCALE_ELEMS = 1 << 20  # benchmark-tensor size (scale factor documented)
+
+
+def paper_masks(model: str, n_workers: int, seed: int = 0,
+                elems: int = SCALE_ELEMS) -> jnp.ndarray:
+    d = PAPER_MODELS[model]["density"]
+    key = jax.random.PRNGKey(hash((model, seed)) % (2**31))
+    return metrics.synth_sparse_masks(key, n_workers, elems, d)
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (blocks on jax results)."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,19 @@
+"""Fig. 13: communication speedup over AllReduce (16 machines), from the
+measured wire volumes of the executable schemes."""
+from benchmarks.fig11_throughput import measured_volumes
+from benchmarks.common import PAPER_MODELS, emit
+
+
+def main() -> None:
+    for model in PAPER_MODELS:
+        vols = measured_volumes(model)
+        base = vols["allreduce"]
+        derived = " ".join(
+            f"{k}={base / v:.2f}x" for k, v in vols.items() if k != "allreduce")
+        emit(f"fig13/{model}", 0.0, derived)
+        assert vols["zen"] < vols["allreduce"], model
+        assert vols["zen"] < vols["omnireduce"], model
+
+
+if __name__ == "__main__":
+    main()

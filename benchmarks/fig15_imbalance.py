@@ -1,0 +1,41 @@
+"""Fig. 15: Push/Pull imbalance ratio — Sparse PS vs Zen, vs #workers."""
+import numpy as np
+
+from benchmarks.common import emit, paper_masks
+from repro.core import metrics
+from repro.core.hashing import hash_mod
+from repro.core.schemes import make_zen_layout
+
+import jax.numpy as jnp
+
+
+def main() -> None:
+    elems = 1 << 20
+    for n in (4, 8, 16, 32):
+        masks = paper_masks("deepfm", n, elems=elems)
+        m = np.asarray(masks)
+        # Sparse PS: even contiguous partitions
+        push_ps = np.stack([mi.reshape(n, -1).sum(1) for mi in m])
+        agg = m.any(0)
+        pull_ps = agg.reshape(n, -1).sum(1)
+        # Zen: h0 hash partitions
+        layout = make_zen_layout(elems, n, density_budget=0.1)
+        p_of = lambda idx: np.asarray(
+            hash_mod(jnp.asarray(idx, jnp.int32), layout.seeds[0], n))
+        push_zen = np.stack([
+            np.bincount(p_of(np.nonzero(mi)[0]), minlength=n) for mi in m])
+        pull_zen = np.bincount(p_of(np.nonzero(agg)[0]), minlength=n)
+
+        i_push_ps = float(metrics.imbalance_ratio_push(jnp.asarray(push_ps)))
+        i_pull_ps = float(metrics.imbalance_ratio_pull(jnp.asarray(pull_ps)))
+        i_push_z = float(metrics.imbalance_ratio_push(jnp.asarray(push_zen)))
+        i_pull_z = float(metrics.imbalance_ratio_pull(jnp.asarray(pull_zen)))
+        emit(f"fig15/n{n}", 0.0,
+             f"ps_push={i_push_ps:.2f} ps_pull={i_pull_ps:.2f} "
+             f"zen_push={i_push_z:.3f} zen_pull={i_pull_z:.3f}")
+        assert i_push_z < 1.1 and i_pull_z < 1.1   # paper: Zen < 1.1 always
+        assert i_push_ps > 2.0                     # PS severely imbalanced
+
+
+if __name__ == "__main__":
+    main()

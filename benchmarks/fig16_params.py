@@ -1,0 +1,42 @@
+"""Fig. 16: Algorithm 1 parameter study — cost vs memory size r1 and vs
+rehash count k (wall time of the jitted hierarchical hash on this host;
+relative shape is what the paper reports)."""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, paper_masks, time_fn
+from repro.core import hashing as H
+
+
+def main() -> None:
+    mask = paper_masks("deepfm", 1, elems=1 << 21)[0]
+    cap = int(mask.shape[0] * 0.06)
+    idx, _ = H.compact_indices(mask, cap)
+    nnz = int(jnp.sum(idx != H.EMPTY))
+    n = 16
+    seeds = H.make_seeds(0, 6)
+    # (a) r1 sweep at k=3
+    for mult, label in ((1.0, "1x"), (2.0, "2x"), (4.0, "4x")):
+        r1 = max(8, int(mult * nnz / n))
+        r2 = max(4, r1 // 10)
+        us = time_fn(lambda r1=r1, r2=r2: H.hierarchical_hash(
+            idx, n=n, r1=r1, r2=r2, k=3, seeds=seeds))
+        part = H.hierarchical_hash(idx, n=n, r1=r1, r2=r2, k=3, seeds=seeds)
+        serial = int(part.rounds_used[-1])
+        emit(f"fig16a/r1_{label}", us,
+             f"serial_writes={serial} overflow={int(part.overflow)}")
+    # (b) k sweep at r1 = 2x
+    r1 = max(8, 2 * nnz // n)
+    r2 = max(4, r1 // 10)
+    for k in (1, 2, 3, 4):
+        us = time_fn(lambda k=k: H.hierarchical_hash(
+            idx, n=n, r1=r1, r2=r2, k=k, seeds=seeds))
+        part = H.hierarchical_hash(idx, n=n, r1=r1, r2=r2, k=k, seeds=seeds)
+        serial = int(part.rounds_used[-1])
+        emit(f"fig16b/k{k}", us,
+             f"serial_writes={serial} overflow={int(part.overflow)}")
+        assert int(part.overflow) == 0 or k < 3
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Fig. 1: (a) overlap-ratio distribution across worker pairs;
+(b) densification ratio vs number of workers."""
+import itertools
+
+import numpy as np
+
+from benchmarks.common import PAPER_MODELS, emit, paper_masks
+from repro.core import metrics
+
+
+def main() -> None:
+    for model in PAPER_MODELS:
+        masks = paper_masks(model, 16)
+        ratios = [float(metrics.overlap_ratio(masks[a], masks[b]))
+                  for a, b in itertools.combinations(range(8), 2)]
+        emit(f"fig1a/{model}_overlap", 0.0,
+             f"mean={np.mean(ratios):.3f} std={np.std(ratios):.3f} "
+             f"min={min(ratios):.3f} max={max(ratios):.3f}")
+        gammas = {n: float(metrics.densification_ratio(masks[:n]))
+                  for n in (2, 4, 8, 16)}
+        emit(f"fig1b/{model}_densification", 0.0,
+             " ".join(f"g{n}={g:.2f}" for n, g in gammas.items()))
+        # C2: gamma grows but stays < n
+        for n, g in gammas.items():
+            assert 1.0 <= g < n
+
+
+if __name__ == "__main__":
+    main()

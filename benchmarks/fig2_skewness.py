@@ -1,0 +1,20 @@
+"""Fig. 2: skewness ratio of non-zero gradient locations vs partitions."""
+import numpy as np
+
+from benchmarks.common import PAPER_MODELS, emit, paper_masks
+from repro.core import metrics
+
+
+def main() -> None:
+    for model in PAPER_MODELS:
+        mask = paper_masks(model, 1)[0]
+        out = {}
+        for n in (8, 16, 32, 64, 128):
+            out[n] = float(metrics.skewness_ratio(mask, n))
+        emit(f"fig2/{model}_skewness", 0.0,
+             " ".join(f"s{n}={v:.1f}" for n, v in out.items()))
+        assert out[128] > out[8]  # skew grows with partitions (paper)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Fig. 7: numerical comparison of communication schemes (NMT profile),
+normalized to dense ring-allreduce, n = 4..128."""
+import numpy as np
+
+from benchmarks.common import emit, paper_masks
+from repro.core import costmodel as cm
+
+
+def main() -> None:
+    masks = paper_masks("nmt", 16)
+    p = cm.profile_from_masks(np.asarray(masks), block=256)
+    for n in (4, 8, 16, 32, 64, 128):
+        t = cm.normalized_times(p, n)
+        emit(f"fig7/n{n}", 0.0,
+             " ".join(f"{k}={v:.3f}" for k, v in t.items()))
+    t128 = cm.normalized_times(p, 128)
+    # headline paper claims at 128 GPUs
+    assert t128["balanced_parallelism"] < 1.0, "BP must beat dense at n=128"
+    assert t128["agsparse"] > 1.0, "AGsparse worse than dense at n=128"
+    emit("fig7/zen_vs_dense_128", 0.0,
+         f"reduction={(1 - t128['zen']) * 100:.0f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Fig. 8: the strawman's memory-size dilemma — larger memory cuts hash
+collisions (information loss) but raises extraction cost."""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, paper_masks, time_fn
+from repro.core import hashing as H
+
+
+def main() -> None:
+    mask = paper_masks("deepfm", 1)[0]
+    idx, _ = H.compact_indices(mask, int(mask.shape[0] * 0.06))
+    nnz = int(jnp.sum(idx != H.EMPTY))
+    seeds = H.make_seeds(0, 4)
+    n = 16
+    for mult in (1, 2, 4, 8):
+        r = max(8, mult * nnz // n)
+        us = time_fn(lambda: H.strawman_hash(idx, n=n, r=r,
+                                             seed=int(seeds[0])))
+        _, lost = H.strawman_hash(idx, n=n, r=r, seed=int(seeds[0]))
+        emit(f"fig8/strawman_mem{mult}x", us,
+             f"loss_rate={float(lost) / nnz:.4f} mem_slots={n * r}")
+    # Zen's hierarchical hash: no loss at 2x memory
+    us = time_fn(lambda: H.hierarchical_hash(
+        idx, n=n, r1=2 * nnz // n, r2=max(4, nnz // (5 * n)), k=3,
+        seeds=seeds))
+    part = H.hierarchical_hash(idx, n=n, r1=2 * nnz // n,
+                               r2=max(4, nnz // (5 * n)), k=3, seeds=seeds)
+    emit("fig8/zen_hierarchical_2x", us,
+         f"loss_rate={float(part.overflow) / nnz:.4f}")
+    assert int(part.overflow) == 0
+
+
+if __name__ == "__main__":
+    main()

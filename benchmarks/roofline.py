@@ -1,0 +1,86 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the
+dry-run artifacts in results/dryrun/*.json.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs        (197 TF/s bf16)
+  memory term     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+  collective term = collective_bytes_per_device / link_bw    (~50 GB/s/link)
+
+The dry-run compiles the per-device SPMD program (shard_map), so the JSON
+numbers are already per-chip; dividing the cluster totals by chips (the
+assignment's formulation) is the identical quantity.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+PEAK_FLOPS = 197e12   # bf16 / chip
+HBM_BW = 819e9        # B/s
+LINK_BW = 50e9        # B/s per ICI link
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def terms(rec: dict) -> dict:
+    t_c = rec["flops_per_device"] / PEAK_FLOPS
+    t_m = rec["bytes_per_device"] / HBM_BW
+    t_n = rec["collective_bytes_total"] / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_n),
+              key=lambda kv: kv[1])
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    # MODEL_FLOPS: 6*N*D for training (fwd+bwd), 2*N*D for inference fwd.
+    # Token count derived from the canonical shape table (robust to older
+    # dry-run records).
+    from repro.configs import INPUT_SHAPES
+    spec = INPUT_SHAPES[rec["shape"]]
+    factor = 6 if rec["mode"] == "train" else 2
+    tokens = spec["global_batch"] * (
+        1 if rec["mode"] == "decode" else spec["seq_len"])
+    model_flops = factor * rec["n_active_params"] * tokens / chips
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dom[0], "bound_s": dom[1],
+        "model_flops_per_device": model_flops,
+        "useful_fraction": (model_flops / rec["flops_per_device"]
+                            if rec["flops_per_device"] > 0 else 0.0),
+    }
+
+
+def load_all(results_dir: Path = RESULTS) -> list[dict]:
+    out = []
+    for fp in sorted(results_dir.glob("*.json")):
+        rec = json.loads(fp.read_text())
+        if "error" in rec:
+            out.append(rec)
+            continue
+        rec["roofline"] = terms(rec)
+        out.append(rec)
+    return out
+
+
+def main() -> None:
+    recs = load_all()
+    if not recs:
+        emit("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun --all` first")
+        return
+    n_err = 0
+    for rec in recs:
+        tag = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        if "error" in rec:
+            emit(f"roofline/{tag}", 0.0, f"ERROR {rec['error'][:80]}")
+            n_err += 1
+            continue
+        r = rec["roofline"]
+        emit(f"roofline/{tag}", r["bound_s"] * 1e6,
+             f"dom={r['dominant']} compute={r['compute_s']:.2e}s "
+             f"memory={r['memory_s']:.2e}s coll={r['collective_s']:.2e}s "
+             f"useful={r['useful_fraction']:.2%}")
+    emit("roofline/summary", 0.0,
+         f"records={len(recs)} errors={n_err}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks.common.emit).
+Run: ``PYTHONPATH=src python -m benchmarks.run [module ...]``
+"""
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "tab1_stats",      # Table 1
+    "fig1_overlap",    # Fig. 1 (a/b)
+    "fig2_skewness",   # Fig. 2
+    "fig7_schemes",    # Fig. 7
+    "fig8_strawman",   # Fig. 8
+    "fig11_throughput",  # Figs. 11/12
+    "fig13_comm",      # Fig. 13
+    "fig14_accuracy",  # Fig. 14
+    "fig15_imbalance",  # Fig. 15
+    "fig16_params",    # Fig. 16
+    "fig17_bitmap",    # Fig. 17
+    "fig18_breakdown",  # Fig. 18
+    "roofline",        # §Roofline (reads results/dryrun)
+]
+
+
+def main() -> None:
+    only = sys.argv[1:]
+    failures = []
+    print("name,us_per_call,derived")
+    for name in (only or MODULES):
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.main()
+            print(f"bench/{name},{(time.time()-t0)*1e6:.0f},ok", flush=True)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"bench/{name},{(time.time()-t0)*1e6:.0f},"
+                  f"FAILED {type(e).__name__}", flush=True)
+            failures.append(name)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

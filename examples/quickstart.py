@@ -1,0 +1,42 @@
+"""Quickstart: Zen sparse gradient synchronization in 60 seconds.
+
+1. Build skewed sparse gradients on 8 simulated workers.
+2. Synchronize them with Zen (hierarchical hashing + hash bitmap).
+3. Verify exactness vs dense allreduce and compare wire volume.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics, schemes
+
+N_WORKERS = 8
+TENSOR = 1 << 16          # embedding-gradient rows
+DENSITY = 0.03
+
+key = jax.random.PRNGKey(0)
+masks = metrics.synth_sparse_masks(key, N_WORKERS, TENSOR, DENSITY)
+grads = jax.random.normal(key, (N_WORKERS, TENSOR)) * masks
+
+print(f"workers={N_WORKERS} tensor={TENSOR} "
+      f"density={float(metrics.density(masks[0])):.3%} "
+      f"skew(16)={float(metrics.skewness_ratio(masks[0], 16)):.1f} "
+      f"densification(8)={float(metrics.densification_ratio(masks)):.2f}")
+
+# --- Zen ---------------------------------------------------------------
+layout = schemes.make_zen_layout(TENSOR, N_WORKERS, density_budget=0.08)
+zen_out, zen_stats = schemes.simulate(schemes.zen_sync, grads, layout=layout)
+
+# --- dense oracle -------------------------------------------------------
+dense_out, dense_stats = schemes.simulate(schemes.dense_sync, grads)
+
+err = float(jnp.max(jnp.abs(zen_out - dense_out)))
+zen_words = float(np.asarray(zen_stats.sent_words).mean())
+dense_words = float(np.asarray(dense_stats.sent_words).mean())
+print(f"max |zen - allreduce| = {err:.2e}  (no information loss)")
+print(f"wire volume: zen={zen_words:,.0f} words, "
+      f"allreduce={dense_words:,.0f} words "
+      f"-> {dense_words / zen_words:.1f}x less traffic")
+assert err < 1e-5

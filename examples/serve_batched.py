@@ -1,0 +1,69 @@
+"""Batched serving example: prefill a batch of prompts, then decode with
+the sequence-sharded KV cache (greedy).
+
+Run: PYTHONPATH=src python examples/serve_batched.py [--arch mamba2-370m]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_mesh
+from repro.train.build import attach_serve, build_program
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen2-0.5b", choices=ALL_ARCHS)
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--prompt-len", type=int, default=32)
+ap.add_argument("--gen", type=int, default=48)
+args = ap.parse_args()
+
+cfg = get_config(args.arch).reduced()
+mesh = make_mesh((1, 1), ("data", "model"))
+prog = build_program(cfg, mesh)
+
+# --- prefill -------------------------------------------------------------
+attach_serve(prog, seq_len=args.prompt_len, global_batch=args.batch,
+             mode="prefill")
+params = prog.init_params(0)
+b = next(iter(SyntheticLM(cfg, DataConfig(seq_len=args.prompt_len,
+                                          batch=args.batch))))
+prompt = {k: jnp.asarray(v) for k, v in b.items() if k != "labels"}
+prompt["tokens"] = prompt["tokens"][:, : args.prompt_len]
+t0 = time.time()
+logits, cache = prog.prefill_step(params, prompt)
+jax.block_until_ready(logits)
+print(f"prefill: batch={args.batch} len={args.prompt_len} "
+      f"{(time.time() - t0) * 1e3:.0f}ms")
+
+# --- decode ---------------------------------------------------------------
+attach_serve(prog, seq_len=args.prompt_len + args.gen,
+             global_batch=args.batch, mode="decode")
+# re-home the prefill cache into the decode-length cache
+dec_cache = prog.fresh_cache()
+if "cross" in dec_cache and "cross" in cache:
+    dec_cache["cross"] = cache["cross"]
+
+tok = prompt["tokens"][:, -1:]
+out = []
+t0 = time.time()
+# replay prompt (simple re-home; a production server would carry the
+# prefill cache over directly when lengths match)
+for i in range(args.prompt_len):
+    _, _, dec_cache = prog.decode_step(params, dec_cache,
+                                       prompt["tokens"][:, i:i + 1])
+for i in range(args.gen):
+    tok, lmax, dec_cache = prog.decode_step(params, dec_cache, tok)
+    out.append(np.asarray(tok)[:, 0])
+jax.block_until_ready(tok)
+dt = time.time() - t0
+total = args.batch * (args.prompt_len + args.gen)
+gen = np.stack(out, 1)
+print(f"decode: generated {args.gen} tokens x {args.batch} seqs "
+      f"in {dt:.2f}s ({total / dt:,.0f} tok/s incl. replay)")
+print("sample token ids:", gen[0][:16])
+assert np.isfinite(np.asarray(lmax, np.float32)).all()

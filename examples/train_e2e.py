@@ -1,0 +1,70 @@
+"""End-to-end driver: train a ~100M-param qwen2-family model for a few
+hundred steps with Zen gradient synchronization, checkpointing, and a
+throughput report.
+
+This is the (b) deliverable's end-to-end example.  It runs on one CPU
+device (mesh 1x1); on a real pod, pass a bigger mesh via repro.launch.train.
+
+Run: PYTHONPATH=src python examples/train_e2e.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.io import restore, save
+from repro.configs import get_config
+from repro.core.zen import SyncConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_mesh
+from repro.optim.optimizers import OptConfig
+from repro.train.build import attach_train, build_program
+from repro.train.steps import TrainerConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--ckpt", default="/tmp/zen_e2e_ckpt")
+args = ap.parse_args()
+
+# ~100M params: qwen2-0.5b geometry, shrunk to 8 layers / d512 but with the
+# full 151936-token vocabulary so the embedding grads are genuinely sparse.
+cfg = dataclasses.replace(
+    get_config("qwen2-0.5b"),
+    n_layers=8, d_model=512, n_heads=8, n_kv=2, head_dim=64, d_ff=1536)
+
+mesh = make_mesh((1, 1), ("data", "model"))
+tcfg = TrainerConfig(
+    opt=OptConfig(lr=3e-4, grad_clip=1.0),
+    sync=SyncConfig(scheme="zen", density_budget=0.25),
+    zero1=True)
+prog = build_program(cfg, mesh, tcfg)
+
+SEQ, BATCH = 256, 8
+attach_train(prog, seq_len=SEQ, global_batch=BATCH)
+params = prog.init_params(0)
+opt = prog.init_opt(params)
+n_params = sum(p.size for p in jax.tree.leaves(params))
+print(f"model: {cfg.name}-100m  params={n_params / 1e6:.1f}M  "
+      f"vocab={cfg.vocab}")
+
+data = iter(SyntheticLM(cfg, DataConfig(seq_len=SEQ, batch=BATCH)))
+t0, losses = time.time(), []
+for step in range(args.steps):
+    b = next(data)
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    params, opt, m = prog.train_step(params, opt, batch)
+    losses.append(float(m["loss"]))
+    if step % 20 == 0:
+        toks = BATCH * SEQ * (step + 1)
+        print(f"step {step:4d}  loss={losses[-1]:.4f}  "
+              f"tok/s={toks / (time.time() - t0):,.0f}  "
+              f"zen_words={float(m['sync/sparse_sent_words']):,.0f}")
+
+save(args.ckpt, {"params": params, "step": jnp.asarray(args.steps)})
+back = restore(args.ckpt)
+assert int(back["step"]) == args.steps
+print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}); "
+      f"checkpoint verified at {args.ckpt}")
+assert losses[-1] < losses[0]

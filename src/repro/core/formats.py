@@ -1,0 +1,192 @@
+"""Sparse tensor formats (§3.2): COO, bitmap, tensor blocks, hash bitmap.
+
+All formats are fixed-capacity / static-shape (see DESIGN.md §3).  Sizes in
+*bytes on the wire* are reported by each format's ``wire_bytes`` so the
+benchmark harness can reproduce Fig. 17 exactly.
+
+Values may be scalars (element-sparse, the paper's setting) or rows of width
+``d`` (row-sparse mode used for embedding-gradient synchronization, where a
+"non-zero gradient" is an embedding row touched by the batch).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import EMPTY, compact_indices, hash_mod
+
+BITS = 32  # paper assumes FP32 gradients; bitmap sizes are in FP32 words
+
+
+# ---------------------------------------------------------------------------
+# COO
+# ---------------------------------------------------------------------------
+
+class COO(NamedTuple):
+    """Fixed-capacity coordinate list. ``indices`` EMPTY-padded."""
+
+    indices: jnp.ndarray  # int32 [C]
+    values: jnp.ndarray   # [C] or [C, d]
+    overflow: jnp.ndarray  # int32 scalar — nnz beyond capacity (dropped)
+
+    @property
+    def capacity(self) -> int:
+        return self.indices.shape[0]
+
+    def nnz(self) -> jnp.ndarray:
+        return jnp.sum((self.indices != EMPTY).astype(jnp.int32))
+
+    def wire_bytes(self) -> jnp.ndarray:
+        """4B index + 4B/value-element per non-zero (paper's 2x overhead)."""
+        per = 1 if self.values.ndim == 1 else self.values.shape[-1]
+        return self.nnz() * (4 + 4 * per)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def coo_encode(dense: jnp.ndarray, capacity: int) -> COO:
+    """Dense [M] or [M, d] -> COO with ``capacity`` slots."""
+    mask = dense != 0 if dense.ndim == 1 else jnp.any(dense != 0, axis=-1)
+    idx, overflow = compact_indices(mask, capacity)
+    safe = jnp.where(idx == EMPTY, 0, idx)
+    vals = dense[safe]
+    vals = jnp.where(
+        (idx == EMPTY) if dense.ndim == 1 else (idx == EMPTY)[:, None], 0, vals
+    )
+    return COO(indices=idx, values=vals, overflow=overflow)
+
+
+def coo_decode(coo: COO, length: int) -> jnp.ndarray:
+    """COO -> dense [length(, d)] (scatter-add; duplicate indices aggregate,
+    which is exactly the server-side aggregation semantics)."""
+    shape = (length,) if coo.values.ndim == 1 else (length, coo.values.shape[-1])
+    out = jnp.zeros(shape, dtype=coo.values.dtype)
+    tgt = jnp.where(coo.indices == EMPTY, length, coo.indices)
+    return out.at[tgt].add(coo.values, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# Plain bitmap (§3.2.1)
+# ---------------------------------------------------------------------------
+
+def bitmap_encode(mask: jnp.ndarray) -> jnp.ndarray:
+    """bool [M] -> uint32 [ceil(M/32)] packed bitmap."""
+    m = mask.shape[0]
+    pad = (-m) % BITS
+    bits = jnp.pad(mask.astype(jnp.uint32), (0, pad)).reshape(-1, BITS)
+    weights = (jnp.uint32(1) << jnp.arange(BITS, dtype=jnp.uint32))
+    return jnp.sum(bits * weights, axis=1, dtype=jnp.uint32)
+
+
+def bitmap_decode(words: jnp.ndarray, length: int) -> jnp.ndarray:
+    """uint32 [W] -> bool [length]."""
+    weights = (jnp.uint32(1) << jnp.arange(BITS, dtype=jnp.uint32))
+    bits = (words[:, None] & weights[None, :]) != 0
+    return bits.reshape(-1)[:length]
+
+
+def bitmap_wire_bytes(length: int) -> int:
+    return ((length + BITS - 1) // BITS) * 4
+
+
+# ---------------------------------------------------------------------------
+# Tensor blocks (OmniReduce's format)
+# ---------------------------------------------------------------------------
+
+class Blocks(NamedTuple):
+    """Non-zero blocks of ``block`` consecutive gradients each."""
+
+    block_ids: jnp.ndarray  # int32 [C] EMPTY-padded
+    values: jnp.ndarray     # [C, block(, d)]
+    overflow: jnp.ndarray
+
+    def n_blocks(self) -> jnp.ndarray:
+        return jnp.sum((self.block_ids != EMPTY).astype(jnp.int32))
+
+    def wire_bytes(self) -> jnp.ndarray:
+        per = self.values.shape[1] if self.values.ndim == 2 else (
+            self.values.shape[1] * self.values.shape[2])
+        return self.n_blocks() * (4 + 4 * per)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "capacity"))
+def blocks_encode(dense: jnp.ndarray, block: int, capacity: int) -> Blocks:
+    m = dense.shape[0]
+    assert m % block == 0, "pad dense tensor to a block multiple"
+    blocked = dense.reshape(m // block, block, *dense.shape[1:])
+    mask = jnp.any(blocked != 0, axis=tuple(range(1, blocked.ndim)))
+    ids, overflow = compact_indices(mask, capacity)
+    safe = jnp.where(ids == EMPTY, 0, ids)
+    vals = blocked[safe]
+    dead = (ids == EMPTY).reshape((-1,) + (1,) * (vals.ndim - 1))
+    vals = jnp.where(dead, 0, vals)
+    return Blocks(block_ids=ids, values=vals, overflow=overflow)
+
+
+def blocks_decode(blocks: Blocks, length: int) -> jnp.ndarray:
+    block = blocks.values.shape[1]
+    nb = length // block
+    out = jnp.zeros((nb,) + blocks.values.shape[1:], dtype=blocks.values.dtype)
+    tgt = jnp.where(blocks.block_ids == EMPTY, nb, blocks.block_ids)
+    out = out.at[tgt].add(blocks.values, mode="drop")
+    return out.reshape((length,) + blocks.values.shape[2:])
+
+
+# ---------------------------------------------------------------------------
+# Hash bitmap (§3.2.2, Alg. 2)
+# ---------------------------------------------------------------------------
+
+class HashBitmapLayout(NamedTuple):
+    """Offline-computed layout shared by all workers and servers.
+
+    ``perm``: int32 [M] — indices sorted by (h0(idx), idx); the concatenation
+        of the per-server ordered sets I_0 .. I_{n-1} of §3.2.2.
+    ``counts``: int32 [n] — |I_i| per server.
+    ``offsets``: int32 [n+1] — prefix sum of counts.
+    """
+
+    perm: jnp.ndarray
+    counts: jnp.ndarray
+    offsets: jnp.ndarray
+
+    @property
+    def n(self) -> int:
+        return self.counts.shape[0]
+
+
+def make_hash_bitmap_layout(length: int, n: int, seeds: jnp.ndarray) -> HashBitmapLayout:
+    """Precompute I_i = {idx : h0(idx) = i} (sorted), done once offline
+    (§3.2.2: "I_i is computed and sorted offline and remains unchanged")."""
+    idx = jnp.arange(length, dtype=jnp.int32)
+    p = hash_mod(idx, seeds[0], n)
+    order = jnp.argsort(p, stable=True)  # stable => ascending idx within I_i
+    counts = jnp.bincount(p, length=n).astype(jnp.int32)
+    offsets = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts)])
+    return HashBitmapLayout(perm=order.astype(jnp.int32), counts=counts,
+                            offsets=offsets.astype(jnp.int32))
+
+
+def hash_bitmap_encode(dense: jnp.ndarray, layout: HashBitmapLayout) -> jnp.ndarray:
+    """Alg. 2 encode, all servers at once: uint32 [ceil(M/32)].
+
+    Server i's slice of the packed words covers positions
+    [offsets[i], offsets[i+1]) of the permuted mask; total size is constantly
+    M/32 words regardless of n (Thm. 3).
+    """
+    mask = dense != 0 if dense.ndim == 1 else jnp.any(dense != 0, axis=-1)
+    return bitmap_encode(mask[layout.perm])
+
+
+def hash_bitmap_decode(words: jnp.ndarray, layout: HashBitmapLayout) -> jnp.ndarray:
+    """Alg. 2 decode: packed words -> bool [M] global non-zero mask."""
+    permuted = bitmap_decode(words, layout.perm.shape[0])
+    mask = jnp.zeros(layout.perm.shape[0], dtype=bool)
+    return mask.at[layout.perm].set(permuted)
+
+
+def hash_bitmap_wire_bytes(length: int) -> int:
+    """Thm. 3: constant |G|/32 bits -> |G|/8 bytes... expressed in FP32 words:
+    |G|/32 words = |G|/8 bytes total across all servers."""
+    return ((length + BITS - 1) // BITS) * 4

@@ -1,0 +1,241 @@
+"""Universal hashing and the hierarchical hashing algorithm (Zen, Alg. 1).
+
+The paper implements Alg. 1 in CUDA with parallel thread writes and an
+``atomicAdd`` serial-memory fallback.  TPUs expose no atomics at the program
+level, so we adapt the mechanism (see DESIGN.md §3):
+
+* parallel hash insertion becomes **round-synchronous scatter**: in round ``i``
+  every still-pending index proposes slot ``h_i(idx)``; a ``scatter_min``
+  resolves races deterministically (the GPU race resolved by hardware becomes a
+  min-reduction — any winner is equally correct because only the *partition*
+  assignment, fixed by ``h0``, must agree across workers);
+* the paper's "write-and-read" collision check becomes a gather-and-compare
+  after the scatter;
+* the atomic counter for the serial region becomes a per-partition prefix sum
+  (``atomicAdd`` over a counter *is* a prefix sum, serialized).
+
+Everything is static-shape and jit-friendly: index sets are fixed-capacity
+``int32`` vectors padded with ``EMPTY`` (int32 max).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.iinfo(jnp.int32).max  # sentinel for "no index in this slot"
+
+
+# ---------------------------------------------------------------------------
+# Universal hash family (MurmurHash3 finalizer, seeded — mirrors the paper's
+# seeded MurmurHash; the fmix32 bijection with a seeded xor gives the bit
+# mixing the Carter–Wegman guarantee of Thm. 2 relies on in practice).
+# ---------------------------------------------------------------------------
+
+def fmix32(h: jnp.ndarray) -> jnp.ndarray:
+    """MurmurHash3 32-bit finalizer (a bijection on uint32)."""
+    h = h.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def hash_u32(x: jnp.ndarray, seed: int | jnp.ndarray) -> jnp.ndarray:
+    """Seeded uint32 hash of int32/uint32 ``x``."""
+    x = x.astype(jnp.uint32)
+    seed = jnp.asarray(seed, dtype=jnp.uint32)
+    # two mixing rounds with seed folded in twice (murmur-style)
+    h = fmix32(x ^ seed)
+    h = fmix32(h ^ (seed * jnp.uint32(0x9E3779B9)) ^ jnp.uint32(0x5BD1E995))
+    return h
+
+
+def hash_mod(x: jnp.ndarray, seed: int | jnp.ndarray, m: int) -> jnp.ndarray:
+    """``h(x) mod m`` as int32 in ``[0, m)``."""
+    return (hash_u32(x, seed) % jnp.uint32(m)).astype(jnp.int32)
+
+
+def make_seeds(key: jax.Array | int, k: int) -> jnp.ndarray:
+    """Generate ``k`` hash-function seeds.
+
+    In the paper, Zen draws random seeds at startup and broadcasts them to all
+    GPUs so every worker uses the same hash family (§3.1.3 "Hash consistency
+    among workers").  In SPMD JAX the same effect falls out of passing the same
+    ``seeds`` array into the jitted step on every device.
+    """
+    if isinstance(key, int):
+        key = jax.random.PRNGKey(key)
+    return jax.random.randint(
+        key, (k,), minval=1, maxval=jnp.iinfo(jnp.int32).max, dtype=jnp.int32
+    ).astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical hashing (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+class HashPartition(NamedTuple):
+    """Result of hierarchically hashing an index set into ``n`` partitions.
+
+    ``memory`` is the ``n x (r1 + r2)`` index memory of Alg. 1 (EMPTY-padded).
+    ``overflow`` counts indices that could not be placed because a partition's
+    serial memory ``r2`` was exhausted (0 when capacities are sized per the
+    paper's recipe r1 = 2|I|, r2 = r1/10; tests assert this).
+    ``rounds_used`` is a per-round histogram of successful parallel writes
+    (round k+1 = serial memory) for the Fig. 16 parameter study.
+    """
+
+    memory: jnp.ndarray      # int32 [n, r1 + r2]
+    overflow: jnp.ndarray    # int32 scalar
+    rounds_used: jnp.ndarray  # int32 [k + 1]
+
+
+def partition_of(indices: jnp.ndarray, n: int, seeds: jnp.ndarray) -> jnp.ndarray:
+    """First-level hash ``h0``: which of the ``n`` partitions an index goes to.
+
+    This is the only hash that must be identical across workers — it fixes the
+    server an index is pushed to, guaranteeing complete aggregation.
+    """
+    return hash_mod(indices, seeds[0], n)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "r1", "r2", "k"))
+def hierarchical_hash(
+    indices: jnp.ndarray,
+    *,
+    n: int,
+    r1: int,
+    r2: int,
+    k: int,
+    seeds: jnp.ndarray,
+) -> HashPartition:
+    """Algorithm 1, TPU-adapted (see module docstring).
+
+    Args:
+      indices: int32 [C] index set, EMPTY-padded (order irrelevant).
+      n: number of partitions (= servers = mesh size of the sync axis).
+      r1: parallel-memory slots per partition (paper recipe: ``2 |I| / n``
+          per partition, i.e. twice the expected load).
+      r2: serial-memory slots per partition (paper recipe: ``r1 / 10``).
+      k: number of second-level hash functions (paper: 3).
+      seeds: uint32 [k + 1]; ``seeds[0]`` is ``h0``, ``seeds[1:]`` are
+          ``h1..hk``.
+
+    Returns:
+      HashPartition with the filled index memory.
+    """
+    if seeds.shape[0] < k + 1:
+        raise ValueError(f"need {k + 1} seeds, got {seeds.shape[0]}")
+    row = r1 + r2
+    valid = indices != EMPTY
+    p = partition_of(indices, n, seeds)  # int32 [C]
+
+    memory = jnp.full((n * row,), EMPTY, dtype=jnp.int32)
+    pending = valid
+    rounds = []
+
+    # --- k parallel rounds -------------------------------------------------
+    for i in range(1, k + 1):
+        q = hash_mod(indices, seeds[i], r1)
+        slot = p * row + q
+        # propose: only pending indices, only into currently-empty slots
+        occupied = memory[slot] != EMPTY
+        propose = pending & ~occupied
+        cand = jnp.where(propose, indices, EMPTY)
+        # scatter_min resolves same-round races deterministically; EMPTY is
+        # int32 max so non-proposals never win a slot.
+        memory = memory.at[slot].min(cand, mode="drop")
+        # write-and-read check (paper §3.1.3 "No information loss")
+        won = pending & (memory[slot] == indices) & propose
+        rounds.append(jnp.sum(won.astype(jnp.int32)))
+        pending = pending & ~won
+
+    # --- serial memory: prefix-sum slot assignment (≙ atomicAdd) -----------
+    # rank of each survivor among survivors of the same partition
+    surv = pending
+    psurv = jnp.where(surv, p, n)  # dead entries sort to the end
+    order = jnp.argsort(psurv, stable=True)
+    p_sorted = psurv[order]
+    # position within its partition run
+    idx_in_run = jnp.arange(indices.shape[0]) - jnp.searchsorted(
+        p_sorted, p_sorted, side="left"
+    )
+    rank = jnp.full_like(indices, -1).at[order].set(idx_in_run)
+    fits = surv & (rank < r2)
+    slot = p * row + r1 + jnp.clip(rank, 0, r2 - 1)
+    memory = memory.at[jnp.where(fits, slot, n * row)].set(
+        jnp.where(fits, indices, EMPTY), mode="drop"
+    )
+    rounds.append(jnp.sum(fits.astype(jnp.int32)))
+    overflow = jnp.sum((surv & ~fits).astype(jnp.int32))
+
+    return HashPartition(
+        memory=memory.reshape(n, row),
+        overflow=overflow,
+        rounds_used=jnp.stack(rounds),
+    )
+
+
+def extract_partitions(part: HashPartition) -> jnp.ndarray:
+    """Line 19–23 of Alg. 1: per-partition index extraction.
+
+    Returns int32 [n, r1+r2] with each partition's live indices compacted to
+    the front (EMPTY-padded) — the ``nonzero()`` step, made static-shape by
+    compaction instead of a dynamic-size result.  Cheap because the memory is
+    already only ~2x the nnz (the paper's "negligible extraction overhead").
+    """
+    mem = part.memory
+    # stable argsort moves EMPTY (int32 max) to the back of each row
+    order = jnp.argsort(mem, axis=1, stable=True)
+    return jnp.take_along_axis(mem, order, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Strawman single-hash algorithm (Appendix A, Alg. 3) — lossy baseline
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n", "r"))
+def strawman_hash(
+    indices: jnp.ndarray, *, n: int, r: int, seed: int | jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Alg. 3: one universal hash into an ``n x r`` memory; collisions lose.
+
+    Returns (memory [n, r], lost_count).  Used by the Fig. 8 / Fig. 14
+    baselines to reproduce the information-loss-vs-memory dilemma.
+    """
+    valid = indices != EMPTY
+    h = hash_u32(indices, seed) % jnp.uint32(n * r)
+    slot = h.astype(jnp.int32)
+    cand = jnp.where(valid, indices, EMPTY)
+    memory = jnp.full((n * r,), EMPTY, dtype=jnp.int32)
+    memory = memory.at[slot].min(cand, mode="drop")
+    survived = valid & (memory[slot] == indices)
+    lost = jnp.sum((valid & ~survived).astype(jnp.int32))
+    return memory.reshape(n, r), lost
+
+
+# ---------------------------------------------------------------------------
+# Index-set utilities
+# ---------------------------------------------------------------------------
+
+def compact_indices(mask: jnp.ndarray, capacity: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Compact the positions where ``mask`` is True into an EMPTY-padded
+    int32 [capacity] vector (ascending order).  Overflow beyond ``capacity``
+    is counted and dropped.
+
+    This is the static-shape equivalent of ``nonzero()``.
+    """
+    m = mask.astype(jnp.int32)
+    pos = jnp.cumsum(m) - 1  # target slot for each True
+    nnz = jnp.sum(m)
+    src = jnp.arange(mask.shape[0], dtype=jnp.int32)
+    tgt = jnp.where(mask & (pos < capacity), pos, capacity)
+    out = jnp.full((capacity,), EMPTY, dtype=jnp.int32)
+    out = out.at[tgt].set(jnp.where(mask, src, EMPTY), mode="drop")
+    overflow = jnp.maximum(nnz - capacity, 0)
+    return out, overflow

@@ -1,0 +1,117 @@
+"""Sparsity characteristics of gradient tensors (§2.2, Defs. 3–6).
+
+All metrics operate on boolean non-zero masks (element- or row-granularity),
+so they apply uniformly to the paper's element-sparse COO setting and our
+row-sparse embedding-gradient setting.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def density(mask: jnp.ndarray) -> jnp.ndarray:
+    """d_G: fraction of non-zero gradients (Def. in §2.1)."""
+    return jnp.mean(mask.astype(jnp.float32))
+
+
+def overlap_ratio(mask_a: jnp.ndarray, mask_b: jnp.ndarray) -> jnp.ndarray:
+    """Def. 3: |I1 ∩ I2| / min(|I1|, |I2|)."""
+    inter = jnp.sum((mask_a & mask_b).astype(jnp.float32))
+    lo = jnp.minimum(jnp.sum(mask_a.astype(jnp.float32)),
+                     jnp.sum(mask_b.astype(jnp.float32)))
+    return inter / jnp.maximum(lo, 1.0)
+
+
+def aggregated_mask(masks: jnp.ndarray) -> jnp.ndarray:
+    """Union of per-worker masks [n, M] -> [M] (non-zeros after aggregation;
+    exact value-cancellation is measure-zero and ignored, as in the paper)."""
+    return jnp.any(masks, axis=0)
+
+
+def densification_ratio(masks: jnp.ndarray) -> jnp.ndarray:
+    """Def. 4: γ_G^n = d_G^n / d_G, with d_G the mean per-worker density."""
+    d_n = density(aggregated_mask(masks))
+    d_1 = jnp.mean(jax.vmap(density)(masks))
+    return d_n / jnp.maximum(d_1, 1e-12)
+
+
+def skewness_ratio(mask: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Def. 5: s_G^n = max_i d_{G_i} / d_G over n equal contiguous partitions."""
+    m = mask.shape[0]
+    assert m % n == 0, "mask length must divide n for even partitioning"
+    parts = mask.reshape(n, m // n).astype(jnp.float32)
+    return jnp.max(jnp.mean(parts, axis=1)) / jnp.maximum(density(mask), 1e-12)
+
+
+def imbalance_ratio_push(part_counts: jnp.ndarray) -> jnp.ndarray:
+    """Def. 6 (Push): max_{i,j} n |I_i^j| / |I_i|.
+
+    ``part_counts``: int [n_workers, n_servers] — worker i's non-zeros routed
+    to server j.
+    """
+    n_srv = part_counts.shape[1]
+    totals = jnp.sum(part_counts, axis=1, keepdims=True).astype(jnp.float32)
+    frac = part_counts.astype(jnp.float32) / jnp.maximum(totals, 1.0)
+    return n_srv * jnp.max(frac)
+
+
+def imbalance_ratio_pull(server_counts: jnp.ndarray) -> jnp.ndarray:
+    """Def. 6 (Pull): max_i n |𝕀_i| / |I| over aggregated per-server sets."""
+    n = server_counts.shape[0]
+    total = jnp.sum(server_counts).astype(jnp.float32)
+    return n * jnp.max(server_counts.astype(jnp.float32)) / jnp.maximum(total, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic sparse-gradient generator calibrated to the paper's observations:
+# skewed non-zero locations (C3), partial overlap across workers (C1),
+# densification with worker count (C2).
+# ---------------------------------------------------------------------------
+
+def synth_sparse_masks(
+    key: jax.Array,
+    n_workers: int,
+    length: int,
+    density_target: float,
+    *,
+    skew: float = 1.5,
+    shared_frac: float = 0.5,
+) -> jnp.ndarray:
+    """Draw [n_workers, length] masks reproducing the paper's characteristics.
+
+    Non-zero positions follow a Zipf-like distribution over ``length``
+    (embedding rows are token ids — frequency is Zipfian, which is exactly why
+    the paper sees C3 skew: frequent tokens live at low indices in sorted
+    vocabularies). ``shared_frac`` of each worker's draws come from a shared
+    hot set (creating C1 partial overlap); the rest are worker-private.
+    """
+    nnz = max(1, int(length * density_target))
+    seed = int(np.asarray(jax.random.randint(key, (), 0, 2**31 - 1)))
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, length + 1, dtype=np.float64)
+    p = ranks ** (-skew)
+    p /= p.sum()
+
+    def draw_exact(r, k):
+        """Draw until exactly k UNIQUE Zipf positions (preserves skew while
+        hitting the target density exactly)."""
+        got = np.unique(r.choice(length, size=4 * k, p=p))
+        while len(got) < k:
+            got = np.unique(np.concatenate(
+                [got, r.choice(length, size=2 * k, p=p)]))
+        r.shuffle(got)
+        return got[:k]
+
+    hot = draw_exact(rng, nnz)  # shared hot set
+    masks = []
+    for _ in range(n_workers):
+        n_shared = int(nnz * shared_frac)
+        own = draw_exact(rng, nnz)
+        sh = rng.choice(hot, size=n_shared, replace=False)
+        rest = own[~np.isin(own, sh)][: nnz - n_shared]
+        m = np.zeros(length, bool)
+        m[np.concatenate([sh, rest])] = True
+        masks.append(m)
+    return jnp.asarray(np.stack(masks))

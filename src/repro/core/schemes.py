@@ -1,0 +1,387 @@
+"""Executable communication schemes for sparse tensor synchronization (§2.3).
+
+Every scheme is an SPMD function of the *local* dense gradient, written
+against ``jax.lax`` collectives with a named axis.  The same code runs:
+
+* under ``jax.vmap(..., axis_name=AXIS)`` — single-device simulation used by
+  unit/property tests and traffic accounting;
+* under ``jax.shard_map`` over a real mesh axis — used by the trainer and the
+  multi-pod dry-run.
+
+Static-shape discipline (DESIGN.md §3): sparse buffers have fixed capacities.
+A scheme's capacity requirement *is* its traffic claim — imbalanced schemes
+(Sparse PS, OmniReduce) must provision ``skew × nnz/n`` per partition where
+balanced ones provision ``nnz/n``; overflow counters surface under-provisioning
+instead of silently corrupting gradients.
+
+Schemes (Table 2):
+  dense_sync        Ring + incremental + parallelism + balanced (psum).
+  agsparse_sync     AllGather of COO (one-shot, centralization).
+  sparcml_sync      SSAR recursive-doubling, incremental, centralization.
+  sparse_ps_sync    P2P + one-shot + parallelism, even-range partition
+                    (imbalanced).
+  omnireduce_sync   As Sparse PS but with the tensor-block format.
+  zen_sync          Balanced Parallelism via hierarchical hashing + hash
+                    bitmap — the paper's contribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import formats
+from repro.core.formats import COO, Blocks
+from repro.core.hashing import (
+    EMPTY,
+    compact_indices,
+    extract_partitions,
+    hash_mod,
+    hierarchical_hash,
+    make_seeds,
+)
+
+
+class SyncStats(NamedTuple):
+    """Per-worker accounting: wire words sent and capacity overflows."""
+
+    sent_words: jnp.ndarray  # f32 scalar
+    overflow: jnp.ndarray    # i32 scalar (total dropped non-zeros)
+
+
+def _nnz(idx: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum((idx != EMPTY).astype(jnp.float32))
+
+
+def _vwidth(dense: jnp.ndarray) -> int:
+    """Words per value: 1 for element-sparse, d for row-sparse."""
+    return 1 if dense.ndim == 1 else dense.shape[-1]
+
+
+def _mask(dense: jnp.ndarray) -> jnp.ndarray:
+    return dense != 0 if dense.ndim == 1 else jnp.any(dense != 0, axis=-1)
+
+
+def _gather_rows(dense: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    safe = jnp.where(idx == EMPTY, 0, idx)
+    vals = dense[safe]
+    dead = (idx == EMPTY) if dense.ndim == 1 else (idx == EMPTY)[:, None]
+    return jnp.where(dead, 0, vals)
+
+
+def _scatter_add(
+    out: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray, *, offset=0
+) -> jnp.ndarray:
+    tgt = jnp.where(idx == EMPTY, out.shape[0], idx - offset)
+    return out.at[tgt].add(vals, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# Dense baseline
+# ---------------------------------------------------------------------------
+
+def dense_sync(dense: jnp.ndarray, *, axis: str) -> tuple[jnp.ndarray, SyncStats]:
+    """Ring allreduce (Horovod's AllReduce in the paper's evaluation)."""
+    n = lax.axis_size(axis)
+    out = lax.psum(dense, axis)
+    words = jnp.float32(2 * (n - 1) / n) * dense.size
+    return out, SyncStats(sent_words=words, overflow=jnp.int32(0))
+
+
+# ---------------------------------------------------------------------------
+# AGsparse
+# ---------------------------------------------------------------------------
+
+def agsparse_sync(
+    dense: jnp.ndarray, *, axis: str, capacity: int
+) -> tuple[jnp.ndarray, SyncStats]:
+    """AllGather of fixed-capacity COO; every GPU aggregates everything."""
+    coo = formats.coo_encode(dense, capacity)
+    all_idx = lax.all_gather(coo.indices, axis)   # [n, C]
+    all_val = lax.all_gather(coo.values, axis)    # [n, C(, d)]
+    out = jnp.zeros_like(dense)
+    out = _scatter_add(out, all_idx.reshape(-1),
+                       all_val.reshape(-1, *dense.shape[1:]))
+    n = lax.axis_size(axis)
+    sent = (n - 1) * _nnz(coo.indices) * (1 + _vwidth(dense))
+    return out, SyncStats(sent_words=sent, overflow=coo.overflow)
+
+
+# ---------------------------------------------------------------------------
+# SparCML (SSAR_Recursive_double)
+# ---------------------------------------------------------------------------
+
+def sparcml_sync(
+    dense: jnp.ndarray, *, axis: str, n: int, capacity: int
+) -> tuple[jnp.ndarray, SyncStats]:
+    """Recursive doubling with incremental aggregation and COO exchange.
+
+    Stage s pairs rank with rank XOR 2^s; the exchanged set doubles in the
+    worst case each stage (densification makes it sub-double in practice), so
+    stage capacity is ``min(capacity * 2^s, M)``.
+    """
+    assert n & (n - 1) == 0, "SparCML recursive doubling needs a power of two"
+    acc = dense
+    sent = jnp.float32(0)
+    overflow = jnp.int32(0)
+    vw = _vwidth(dense)
+    for s in range(int(math.log2(n))):
+        cap_s = min(capacity * (2 ** s) * 2, dense.shape[0])
+        coo = formats.coo_encode(acc, cap_s)
+        perm = [(i, i ^ (1 << s)) for i in range(n)]
+        got_idx = lax.ppermute(coo.indices, axis, perm)
+        got_val = lax.ppermute(coo.values, axis, perm)
+        acc = _scatter_add(acc, got_idx, got_val)
+        sent = sent + _nnz(coo.indices) * (1 + vw)
+        overflow = overflow + coo.overflow
+    return acc, SyncStats(sent_words=sent, overflow=overflow)
+
+
+# ---------------------------------------------------------------------------
+# Sparse PS (even-range partitioning — the imbalanced strawman)
+# ---------------------------------------------------------------------------
+
+def sparse_ps_sync(
+    dense: jnp.ndarray, *, axis: str, n: int, cap_push: int, cap_pull: int
+) -> tuple[jnp.ndarray, SyncStats]:
+    """P2P + one-shot + parallelism with *even contiguous* partitions.
+
+    Each device doubles as worker and server ``rank``.  Because the partition
+    is positional, C3 skew concentrates non-zeros in few partitions: correct
+    provisioning needs ``cap_push ≈ skew × nnz / n`` — the imbalance cost.
+    """
+    M = dense.shape[0]
+    assert M % n == 0
+    shard = M // n
+    vw = _vwidth(dense)
+    # --- Push: split into n contiguous ranges, COO-encode each --------------
+    parts = dense.reshape(n, shard, *dense.shape[1:])
+    coo = jax.vmap(lambda d: formats.coo_encode(d, cap_push))(parts)
+    # indices are local to the range; a2a delivers partition r to rank r
+    got_idx = lax.all_to_all(coo.indices, axis, split_axis=0, concat_axis=0)
+    got_val = lax.all_to_all(coo.values, axis, split_axis=0, concat_axis=0)
+    # --- Server aggregation --------------------------------------------------
+    buf = jnp.zeros((shard, *dense.shape[1:]), dense.dtype)
+    buf = _scatter_add(buf, got_idx.reshape(-1),
+                       got_val.reshape(-1, *dense.shape[1:]))
+    # --- Pull: COO of the aggregated shard, all_gather -----------------------
+    pull = formats.coo_encode(buf, cap_pull)
+    all_idx = lax.all_gather(pull.indices, axis)  # [n, cap_pull]
+    all_val = lax.all_gather(pull.values, axis)
+    rank_off = (jnp.arange(n, dtype=jnp.int32) * shard)[:, None]
+    glob = jnp.where(all_idx == EMPTY, EMPTY, all_idx + rank_off)
+    out = jnp.zeros_like(dense)
+    out = _scatter_add(out, glob.reshape(-1),
+                       all_val.reshape(-1, *dense.shape[1:]))
+    sent = (jnp.sum(jax.vmap(_nnz)(coo.indices)) - _nnz(coo.indices[lax.axis_index(axis)])
+            + (n - 1) * _nnz(pull.indices)) * (1 + vw)
+    overflow = jnp.sum(coo.overflow) + pull.overflow
+    return out, SyncStats(sent_words=sent, overflow=overflow)
+
+
+# ---------------------------------------------------------------------------
+# OmniReduce (tensor-block format, even-range partitioning)
+# ---------------------------------------------------------------------------
+
+def omnireduce_sync(
+    dense: jnp.ndarray, *, axis: str, n: int, block: int,
+    cap_push: int, cap_pull: int,
+) -> tuple[jnp.ndarray, SyncStats]:
+    """As Sparse PS but transmitting non-zero *blocks* (no per-element index).
+    """
+    M = dense.shape[0]
+    assert M % n == 0 and (M // n) % block == 0
+    shard = M // n
+    parts = dense.reshape(n, shard, *dense.shape[1:])
+    blk = jax.vmap(lambda d: formats.blocks_encode(d, block, cap_push))(parts)
+    got_ids = lax.all_to_all(blk.block_ids, axis, split_axis=0, concat_axis=0)
+    got_val = lax.all_to_all(blk.values, axis, split_axis=0, concat_axis=0)
+    nb = shard // block
+    buf = jnp.zeros((nb, block, *dense.shape[1:]), dense.dtype)
+    tgt = jnp.where(got_ids == EMPTY, nb, got_ids).reshape(-1)
+    buf = buf.at[tgt].add(got_val.reshape(-1, *got_val.shape[2:]), mode="drop")
+    buf = buf.reshape(shard, *dense.shape[1:])
+    pull = formats.blocks_encode(buf, block, cap_pull)
+    all_ids = lax.all_gather(pull.block_ids, axis)
+    all_val = lax.all_gather(pull.values, axis)
+    rank_off = (jnp.arange(n, dtype=jnp.int32) * nb)[:, None]
+    glob = jnp.where(all_ids == EMPTY, EMPTY, all_ids + rank_off)
+    out_b = jnp.zeros((M // block, block, *dense.shape[1:]), dense.dtype)
+    tgt = jnp.where(glob == EMPTY, M // block, glob).reshape(-1)
+    out_b = out_b.at[tgt].add(all_val.reshape(-1, *all_val.shape[2:]),
+                              mode="drop")
+    out = out_b.reshape(M, *dense.shape[1:])
+    vw = _vwidth(dense)
+    wpb = block * vw + 1  # words per block on the wire (values + id)
+    sent = (jnp.sum(jax.vmap(lambda i: _nnz(i))(blk.block_ids))
+            - _nnz(blk.block_ids[lax.axis_index(axis)])
+            + (n - 1) * _nnz(pull.block_ids)) * wpb
+    overflow = jnp.sum(blk.overflow) + pull.overflow
+    return out, SyncStats(sent_words=sent, overflow=overflow)
+
+
+# ---------------------------------------------------------------------------
+# Zen: Balanced Parallelism via hierarchical hashing + hash bitmap
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ZenLayout:
+    """Offline-precomputed, worker-shared state for one tensor shape.
+
+    Built once per (tensor length, n, h0 seed) — the paper broadcasts the
+    hash seeds at job start; everything here is a pure function of those.
+    """
+
+    n: int
+    length: int
+    seeds: np.ndarray          # uint32 [k+1]
+    perm: np.ndarray           # int32 [M]   (I_0 .. I_{n-1} concatenated)
+    offsets: np.ndarray        # int32 [n+1]
+    local_pos: np.ndarray      # int32 [M]   global idx -> rank inside its I_p
+    cap_server: int            # max_i |I_i| (static server buffer size)
+    # Alg. 1 capacities
+    cap_index: int             # C: worker-side nnz budget
+    r1: int
+    r2: int
+    k: int
+
+    @property
+    def cap_bitmap_words(self) -> int:
+        return (self.cap_server + 31) // 32
+
+
+def make_zen_layout(
+    length: int,
+    n: int,
+    *,
+    density_budget: float,
+    key: int = 0,
+    k: int = 3,
+    r1_factor: float = 2.0,
+    r2_ratio: float = 0.1,
+) -> ZenLayout:
+    """Precompute the Zen layout (offline; numpy, not traced).
+
+    ``density_budget`` is the max per-worker density the buffers are sized
+    for (the paper sizes r1 = 2 |G| d_G).  Per-partition parallel memory is
+    ``r1 = r1_factor * C / n`` and serial memory ``r2 = r2_ratio * r1``.
+    """
+    seeds = np.asarray(make_seeds(key, k + 1))
+    idx = np.arange(length, dtype=np.int64)
+    p = np.asarray(hash_mod(jnp.asarray(idx, jnp.int32), seeds[0], n))
+    order = np.argsort(p, kind="stable").astype(np.int32)
+    counts = np.bincount(p, minlength=n)
+    offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    local = np.empty(length, dtype=np.int32)
+    local[order] = np.arange(length, dtype=np.int32) - offsets[p[order]]
+    cap_index = max(32, int(math.ceil(length * density_budget)))
+    r1 = max(8, int(math.ceil(r1_factor * cap_index / n)))
+    r2 = max(4, int(math.ceil(r2_ratio * r1)))
+    return ZenLayout(
+        n=n, length=length, seeds=seeds, perm=order,
+        offsets=offsets, local_pos=local,
+        cap_server=int(counts.max()), cap_index=cap_index,
+        r1=r1, r2=r2, k=k,
+    )
+
+
+def zen_sync(
+    dense: jnp.ndarray, *, axis: str, layout: ZenLayout,
+    use_hash_bitmap: bool = True,
+) -> tuple[jnp.ndarray, SyncStats]:
+    """Zen synchronization: Alg. 1 push + Alg. 2 (hash bitmap) pull.
+
+    1. Compact local non-zero indices; hierarchically hash into n balanced
+       partitions (h0 fixes the server; h1..hk + serial memory place them).
+    2. Push: all_to_all of (indices, values) — balanced by Thm. 2.
+    3. Aggregate: each server scatter-adds into its compact partition buffer
+       (positions = offline local_pos, so same index from all workers lands
+       in the same slot — complete aggregation).
+    4. Pull: all_gather of (hash bitmap, non-zero values) — constant-size
+       index metadata by Thm. 3.  With ``use_hash_bitmap=False``, pull uses
+       COO (the Fig. 18 ablation).
+    """
+    lo = layout
+    n = lo.n
+    vw = _vwidth(dense)
+    seeds = jnp.asarray(lo.seeds)
+
+    # --- 1. local sparsification + hierarchical hash -------------------------
+    idx, ov_c = compact_indices(_mask(dense), lo.cap_index)
+    part = hierarchical_hash(idx, n=n, r1=lo.r1, r2=lo.r2, k=lo.k, seeds=seeds)
+    pidx = extract_partitions(part)              # [n, r1+r2] compacted
+    pval = jax.vmap(lambda ii: _gather_rows(dense, ii))(pidx)
+
+    # --- 2. Push (balanced all_to_all) ---------------------------------------
+    got_idx = lax.all_to_all(pidx, axis, split_axis=0, concat_axis=0)
+    got_val = lax.all_to_all(pval, axis, split_axis=0, concat_axis=0)
+
+    # --- 3. server-side aggregation into the compact partition buffer --------
+    local_pos = jnp.asarray(lo.local_pos)
+    flat_idx = got_idx.reshape(-1)
+    lp = jnp.where(flat_idx == EMPTY, lo.cap_server,
+                   local_pos[jnp.where(flat_idx == EMPTY, 0, flat_idx)])
+    buf = jnp.zeros((lo.cap_server, *dense.shape[1:]), dense.dtype)
+    buf = buf.at[lp].add(got_val.reshape(-1, *dense.shape[1:]), mode="drop")
+
+    # --- 4. Pull --------------------------------------------------------------
+    srv_mask = _mask(buf)
+    cap_pull = lo.r1 + lo.r2  # aggregated nnz per server <= sum of pushes
+    lpos, ov_p = compact_indices(srv_mask, cap_pull)
+    vals = _gather_rows(buf, lpos)
+    perm = jnp.asarray(lo.perm)
+    offsets = jnp.asarray(lo.offsets)
+
+    if use_hash_bitmap:
+        bm = formats.bitmap_encode(srv_mask)               # [cap_bitmap_words]
+        all_bm = lax.all_gather(bm, axis)                   # [n, W]
+        all_val = lax.all_gather(vals, axis)                # [n, cap_pull(,d)]
+        # decode: per server p, set-bit local positions -> global indices
+        def decode(p, words):
+            m = formats.bitmap_decode(words, lo.cap_server)
+            lpos_p, _ = compact_indices(m, cap_pull)
+            g = jnp.where(lpos_p == EMPTY, EMPTY,
+                          perm[jnp.clip(offsets[p] + lpos_p, 0, lo.length - 1)])
+            return g
+        glob = jax.vmap(decode)(jnp.arange(n, dtype=jnp.int32), all_bm)
+        pull_words = (n - 1) * (_nnz(lpos) * vw + lo.cap_bitmap_words)
+    else:  # COO pull (ablation)
+        glob_l = jnp.where(lpos == EMPTY, EMPTY,
+                           perm[jnp.clip(offsets[lax.axis_index(axis)] + lpos,
+                                         0, lo.length - 1)])
+        glob = lax.all_gather(glob_l, axis)
+        all_val = lax.all_gather(vals, axis)
+        pull_words = (n - 1) * _nnz(lpos) * (vw + 1)
+
+    out = jnp.zeros_like(dense)
+    out = _scatter_add(out, glob.reshape(-1),
+                       all_val.reshape(-1, *dense.shape[1:]))
+
+    my_rank = lax.axis_index(axis)
+    push_sent = (jnp.sum(jax.vmap(_nnz)(pidx)) - _nnz(pidx[my_rank])) * (1 + vw)
+    stats = SyncStats(
+        sent_words=push_sent + pull_words,
+        overflow=ov_c + part.overflow + ov_p,
+    )
+    return out, stats
+
+
+# ---------------------------------------------------------------------------
+# Registry + single-device simulation helper
+# ---------------------------------------------------------------------------
+
+AXIS = "sync"
+
+
+def simulate(fn, per_worker_dense: jnp.ndarray, **kwargs):
+    """Run a scheme over [n, M(, d)] worker gradients on one device via vmap.
+
+    Returns (aggregated [n, M(, d)] — identical rows, SyncStats batched)."""
+    f = functools.partial(fn, axis=AXIS, **kwargs)
+    return jax.vmap(f, axis_name=AXIS)(per_worker_dense)

@@ -1,0 +1,174 @@
+"""Gradient-synchronization API: Zen as a first-class trainer feature.
+
+``GradSync`` maps a gradient pytree to its synchronized form inside a
+``shard_map`` region.  Leaves named in ``sparse_rules`` (row-sparse tensors —
+embedding tables in the assigned architectures) are synchronized with a
+selectable sparse scheme over the data axis; everything else is a plain
+``psum``.  A ``pod`` axis, when present, is reduced hierarchically after the
+intra-pod sparse sync (paper §4.1 does the same with NVLink-intra /
+network-inter).
+
+Scheme selection is a config knob so the paper's baselines are runnable
+end-to-end (Fig. 11/12 reproduction), not just as microbenchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import schemes
+from repro.core.schemes import SyncStats, ZenLayout, make_zen_layout
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncConfig:
+    """How gradients are synchronized across the data-parallel axis."""
+
+    scheme: str = "zen"           # zen | dense | agsparse | sparcml | sparse_ps | omnireduce | auto
+    density_budget: float = 0.25  # capacity sizing for sparse buffers
+    k: int = 3                    # Alg. 1 rehash rounds
+    r1_factor: float = 2.0        # r1 = r1_factor * nnz_budget / n  (paper: 2)
+    r2_ratio: float = 0.1         # r2 = r2_ratio * r1               (paper: 0.1)
+    use_hash_bitmap: bool = True  # Alg. 2 on Pull (Fig. 18 ablation knob)
+    seed: int = 0
+    # 'auto' (beyond-paper): per-leaf offline choice — Zen wins iff the COO
+    # push + bitmap pull volume under the density budget beats dense ring
+    # allreduce; otherwise that leaf falls back to dense.  This prevents
+    # Zen from LOSING on high-density tensors (paper Fig. 17's crossover).
+    auto_threshold: float = 1.0   # zen_volume < threshold * dense_volume
+
+
+def _leaf_path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+    )
+
+
+class GradSync:
+    """Synchronize a gradient pytree across ``data`` (and ``pod``) axes.
+
+    Args:
+      cfg: SyncConfig.
+      sparse_paths: list of path substrings marking row-sparse leaves
+          (e.g. ``["embed/table"]``).  Matched leaves must be 2-D
+          ``[rows, d]`` row-sparse tensors.
+      grad_shapes: pytree of ShapeDtypeStruct matching the grads — used to
+          precompute Zen layouts offline (per-leaf row counts).
+      n_data: size of the data axis.
+      data_axis / pod_axis: mesh axis names ('pod' may be None).
+    """
+
+    def __init__(
+        self,
+        cfg: SyncConfig,
+        sparse_paths: list[str],
+        grad_shapes: Any,
+        n_data: int,
+        data_axis: str = "data",
+        pod_axis: str | None = None,
+    ):
+        self.cfg = cfg
+        self.data_axis = data_axis
+        self.pod_axis = pod_axis
+        self.n_data = n_data
+        self.sparse_paths = tuple(sparse_paths)
+        self._layouts: dict[str, ZenLayout] = {}
+        self._auto_dense: set[str] = set()
+        leaves = jax.tree_util.tree_flatten_with_path(grad_shapes)[0]
+        for path, leaf in leaves:
+            name = _leaf_path_str(path)
+            if not self._is_sparse(name):
+                continue
+            rows = leaf.shape[0] if len(leaf.shape) >= 1 else 1
+            d = leaf.shape[1] if len(leaf.shape) > 1 else 1
+            if cfg.scheme == "auto":
+                # offline volume comparison (words, per worker):
+                # zen: push COO 2*budget*rows*(1+d) / n + pull values+bitmap
+                n = max(n_data, 2)
+                cap = cfg.density_budget * rows
+                zen_words = (2 * (n - 1) / n * cap * (1 + d)
+                             + (n - 1) / n * (min(n * cap, rows) * d
+                                              + rows / 32))
+                dense_words = 2 * (n - 1) / n * rows * d
+                if zen_words >= cfg.auto_threshold * dense_words:
+                    self._auto_dense.add(name)
+                    continue
+            if cfg.scheme in ("zen", "auto"):
+                self._layouts[name] = make_zen_layout(
+                    rows, n_data,
+                    density_budget=cfg.density_budget, key=cfg.seed,
+                    k=cfg.k, r1_factor=cfg.r1_factor, r2_ratio=cfg.r2_ratio,
+                )
+
+    def _is_sparse(self, name: str) -> bool:
+        return any(s in name for s in self.sparse_paths)
+
+    # -- per-leaf sync -------------------------------------------------------
+
+    def _sync_sparse(self, name: str, g: jnp.ndarray) -> tuple[jnp.ndarray, SyncStats]:
+        cfg, ax, n = self.cfg, self.data_axis, self.n_data
+        orig_shape = g.shape
+        if g.ndim > 2:  # stacked-layer leaves: merge leading dims into rows?
+            # embedding tables are [rows, d]; stacked variants unsupported
+            raise ValueError(f"sparse leaf {name} must be 2-D, got {orig_shape}")
+        cap = max(64, int(g.shape[0] * cfg.density_budget))
+        if cfg.scheme == "auto" and name in self._auto_dense:
+            out, st = schemes.dense_sync(g, axis=ax)
+        elif cfg.scheme in ("zen", "auto"):
+            out, st = schemes.zen_sync(
+                g, axis=ax, layout=self._layouts[name],
+                use_hash_bitmap=cfg.use_hash_bitmap)
+        elif cfg.scheme == "agsparse":
+            out, st = schemes.agsparse_sync(g, axis=ax, capacity=cap)
+        elif cfg.scheme == "sparcml":
+            out, st = schemes.sparcml_sync(g, axis=ax, n=n, capacity=cap)
+        elif cfg.scheme == "sparse_ps":
+            # imbalanced: needs skew headroom (cap is per-partition)
+            out, st = schemes.sparse_ps_sync(
+                g, axis=ax, n=n, cap_push=cap, cap_pull=cap)
+        elif cfg.scheme == "omnireduce":
+            blk = 8
+            nb = max(8, cap // blk)
+            out, st = schemes.omnireduce_sync(
+                g, axis=ax, n=n, block=blk, cap_push=nb, cap_pull=nb)
+        elif cfg.scheme == "dense":
+            out, st = schemes.dense_sync(g, axis=ax)
+        else:
+            raise ValueError(f"unknown scheme {cfg.scheme}")
+        return out / n, st  # mean-reduce convention (matches psum/n below)
+
+    # -- pytree sync -----------------------------------------------------------
+
+    def __call__(self, grads: Any) -> tuple[Any, dict[str, jnp.ndarray]]:
+        """Synchronize grads (mean over data[, pod]); returns (grads, stats)."""
+        sent = jnp.float32(0.0)
+        overflow = jnp.int32(0)
+        dense_words = jnp.float32(0.0)
+
+        def sync_leaf(path, g):
+            nonlocal sent, overflow, dense_words
+            name = _leaf_path_str(path)
+            if self._is_sparse(name):
+                out, st = self._sync_sparse(name, g)
+                sent = sent + st.sent_words
+                overflow = overflow + st.overflow
+            else:
+                out = lax.psum(g, self.data_axis) / self.n_data
+                dense_words = dense_words + jnp.float32(
+                    2 * (self.n_data - 1) / self.n_data) * g.size
+            if self.pod_axis is not None:
+                out = lax.pmean(out, self.pod_axis)
+            return out
+
+        synced = jax.tree_util.tree_map_with_path(sync_leaf, grads)
+        stats = {
+            "sync/sparse_sent_words": sent,
+            "sync/overflow": overflow,
+            "sync/dense_words": dense_words,
+        }
+        return synced, stats

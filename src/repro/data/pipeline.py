@@ -1,0 +1,83 @@
+"""Synthetic data pipeline.
+
+Token ids follow a Zipf distribution over the vocabulary — the natural-
+language frequency law that *creates* the paper's C3 skew in embedding
+gradients (frequent tokens → few hot rows).  Deterministic per (seed, step,
+shard) so every data-parallel rank draws a disjoint, reproducible stream.
+
+Also provides ``make_batch_specs`` — the ShapeDtypeStruct stand-ins for the
+dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seq_len: int
+    batch: int              # per-host batch (local)
+    zipf: float = 1.2       # token-frequency skew
+    seed: int = 0
+
+
+class SyntheticLM:
+    """Infinite stream of {tokens, labels} (+ frames/patches stubs)."""
+
+    def __init__(self, cfg: ArchConfig, dc: DataConfig, shard: int = 0):
+        self.cfg, self.dc, self.shard = cfg, dc, shard
+        v = cfg.vocab
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        w = ranks ** (-dc.zipf)
+        self._p = w / w.sum()
+        self._step = 0
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        rng = np.random.default_rng(
+            (self.dc.seed, self._step, self.shard))
+        self._step += 1
+        cfg, dc = self.cfg, self.dc
+        toks = rng.choice(cfg.vocab, size=(dc.batch, dc.seq_len + 1),
+                          p=self._p).astype(np.int32)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if cfg.kind == "enc_dec":
+            batch["frames"] = rng.standard_normal(
+                (dc.batch, cfg.enc_len, cfg.d_model)).astype(np.float32) * 0.02
+        if cfg.kind == "vlm":
+            batch["patches"] = rng.standard_normal(
+                (dc.batch, cfg.n_patches, cfg.d_model)).astype(np.float32) * 0.02
+        return batch
+
+
+def make_batch_specs(cfg: ArchConfig, seq_len: int, global_batch: int,
+                     mode: str) -> dict:
+    """ShapeDtypeStruct inputs for (arch, shape) — dry-run stand-ins.
+
+    train:   tokens/labels [B, S] (+frames/patches)
+    prefill: tokens [B, S] (+frames/patches)
+    decode:  tokens [B, 1] — the cache is built separately.
+    """
+    B, S = global_batch, seq_len
+    i32 = jnp.int32
+    f = jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+    if mode == "decode":
+        return {"tokens": sds((B, 1), i32)}
+    batch = {"tokens": sds((B, S), i32)}
+    if mode == "train":
+        batch["labels"] = sds((B, S), i32)
+    if cfg.kind == "enc_dec":
+        batch["frames"] = sds((B, cfg.enc_len, cfg.d_model), f)
+    if cfg.kind == "vlm":
+        batch["patches"] = sds((B, cfg.n_patches, cfg.d_model), f)
+    return batch

@@ -1,0 +1,66 @@
+"""Pallas-TPU kernels: hash-bitmap pack / unpack (Algorithm 2).
+
+Pack: 32 occupancy bits -> one uint32 word via lane-shifted integer adds
+(VPU; no MXU involvement — the bit weights exceed f32's exact range so a
+matmul-with-weights formulation would be lossy).
+Unpack: word >> lane & 1 with a broadcasted 2-D iota (TPU requires >=2D
+iota).
+
+Layout: bits [W, 32] int32 <-> words [W] uint32; W tiled by 128 rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BITS = 32
+BLOCK_W = 128
+
+
+def _pack_kernel(bits_ref, words_ref):
+    bits = bits_ref[...].astype(jnp.uint32)          # [BW, 32]
+    lane = jax.lax.broadcasted_iota(jnp.uint32, bits.shape, 1)
+    words_ref[...] = jnp.sum(bits << lane, axis=1, dtype=jnp.uint32)
+
+
+def _unpack_kernel(words_ref, bits_ref):
+    words = words_ref[...]                           # [BW]
+    lane = jax.lax.broadcasted_iota(
+        jnp.uint32, (words.shape[0], BITS), 1)
+    bits_ref[...] = ((words[:, None] >> lane) & jnp.uint32(1)).astype(
+        jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitmap_pack(bits: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """bits int32 0/1 [W, 32] -> uint32 [W]."""
+    W = bits.shape[0]
+    bw = min(BLOCK_W, W)
+    assert W % bw == 0 and bits.shape[1] == BITS
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(W // bw,),
+        in_specs=[pl.BlockSpec((bw, BITS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bw,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((W,), jnp.uint32),
+        interpret=interpret,
+    )(bits)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitmap_unpack(words: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """uint32 [W] -> bits int32 0/1 [W, 32]."""
+    W = words.shape[0]
+    bw = min(BLOCK_W, W)
+    assert W % bw == 0
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=(W // bw,),
+        in_specs=[pl.BlockSpec((bw,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bw, BITS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((W, BITS), jnp.int32),
+        interpret=interpret,
+    )(words)

@@ -1,0 +1,81 @@
+"""Pallas-TPU kernel: the hash stage of Algorithm 1.
+
+Computes, for a tile of gradient indices, the first-level partition
+``p = h0(idx) mod n`` and all k second-level slot candidates
+``q_i = h_i(idx) mod r1`` in one VMEM pass.  This is the compute hot-spot of
+Zen's sparsification path (2k+2 murmur finalizer rounds per index, pure
+VPU integer ALU); the conflict resolution (scatter rounds) stays in XLA where
+the TPU's sequential grid makes it a memory-bound pass (DESIGN.md §3).
+
+Layout: indices are reshaped to [R, 128] (lane-aligned); the kernel tiles
+rows with BlockSpec (BR, 128).  Hash seeds are compile-time constants (they
+are drawn once per training job, exactly like the paper broadcasts seeds at
+startup).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import EMPTY
+
+LANES = 128
+BLOCK_ROWS = 8  # (8, 128) int32 tiles — one VREG-aligned VMEM tile
+
+
+def _fmix32(h):
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def _hash_u32(x, seed: int):
+    s = jnp.uint32(seed)
+    h = _fmix32(x.astype(jnp.uint32) ^ s)
+    return _fmix32(h ^ (s * jnp.uint32(0x9E3779B9)) ^ jnp.uint32(0x5BD1E995))
+
+
+def _kernel(idx_ref, p_ref, q_ref, *, seeds: tuple, n: int, r1: int):
+    idx = idx_ref[...]
+    valid = idx != EMPTY
+    p = (_hash_u32(idx, seeds[0]) % jnp.uint32(n)).astype(jnp.int32)
+    p_ref[...] = jnp.where(valid, p, n)
+    for i, s in enumerate(seeds[1:]):
+        q = (_hash_u32(idx, s) % jnp.uint32(r1)).astype(jnp.int32)
+        q_ref[i, ...] = jnp.where(valid, q, r1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("seeds", "n", "r1", "interpret"))
+def hash_stage(indices: jnp.ndarray, *, seeds: tuple, n: int, r1: int,
+               interpret: bool = True):
+    """indices int32 [R, 128] -> (p [R, 128], q [k, R, 128]).
+
+    ``seeds``: tuple of k+1 python ints (compile-time).
+    """
+    R = indices.shape[0]
+    assert indices.shape[1] == LANES
+    k = len(seeds) - 1
+    br = min(BLOCK_ROWS, R)
+    assert R % br == 0
+    grid = (R // br,)
+    return pl.pallas_call(
+        functools.partial(_kernel, seeds=seeds, n=n, r1=r1),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, LANES), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((k, br, LANES), lambda i: (0, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((k, R, LANES), jnp.int32),
+        ],
+        interpret=interpret,
+    )(indices)

@@ -1,0 +1,63 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+These handle padding / reshaping to the kernels' tile layouts and expose the
+same signatures as the pure-jnp references in ``ref.py``.  ``interpret=True``
+(the default on CPU) executes the kernel bodies in Python for validation;
+on TPU pass ``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import EMPTY
+from repro.kernels import bitmap as _bm
+from repro.kernels import hash_stage as _hs
+from repro.kernels import scatter_add as _sa
+
+LANES = _hs.LANES
+BITS = _bm.BITS
+
+
+def hash_stage_op(indices: jnp.ndarray, seeds, n: int, r1: int,
+                  *, interpret: bool = True):
+    """indices int32 [C] -> (p [C], q [k, C]) via the Pallas kernel."""
+    seeds = tuple(int(s) for s in seeds)
+    C = indices.shape[0]
+    pad = (-C) % (LANES * _hs.BLOCK_ROWS)
+    idx2 = jnp.pad(indices, (0, pad), constant_values=EMPTY)
+    idx2 = idx2.reshape(-1, LANES)
+    p, q = _hs.hash_stage(idx2, seeds=seeds, n=n, r1=r1, interpret=interpret)
+    return p.reshape(-1)[:C], q.reshape(len(seeds) - 1, -1)[:, :C]
+
+
+def bitmap_pack_op(mask: jnp.ndarray, *, interpret: bool = True):
+    """bool/int [M] -> uint32 [ceil(M/32)] packed words."""
+    M = mask.shape[0]
+    W = -(-M // BITS)
+    padW = (-W) % _bm.BLOCK_W
+    bits = jnp.pad(mask.astype(jnp.int32), (0, (W + padW) * BITS - M))
+    words = _bm.bitmap_pack(bits.reshape(-1, BITS), interpret=interpret)
+    return words[:W]
+
+
+def bitmap_unpack_op(words: jnp.ndarray, length: int, *,
+                     interpret: bool = True):
+    """uint32 [W] -> bool [length]."""
+    W = words.shape[0]
+    padW = (-W) % _bm.BLOCK_W
+    wp = jnp.pad(words, (0, padW))
+    bits = _bm.bitmap_unpack(wp, interpret=interpret)
+    return bits.reshape(-1)[:length].astype(bool)
+
+
+def coo_scatter_add_op(out: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray,
+                       *, interpret: bool = True):
+    """out [M, d] += vals [C, d] at row idx [C] (EMPTY dropped)."""
+    C = idx.shape[0]
+    pad = (-C) % _sa.BLOCK_C
+    idxp = jnp.pad(idx, (0, pad), constant_values=EMPTY)
+    valsp = jnp.pad(vals, ((0, pad), (0, 0)))
+    return _sa.coo_scatter_add(out, idxp, valsp, interpret=interpret)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import EMPTY, hash_u32
+
+BITS = 32
+
+
+def hash_stage_ref(indices: jnp.ndarray, seeds: jnp.ndarray, n: int,
+                   r1: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Vectorized hash stage of Alg. 1: for each index, its partition
+    p = h0(idx) mod n and candidate slots q_i = h_i(idx) mod r1 for every
+    second-level hash.
+
+    indices: int32 [C] (EMPTY-padded); seeds: uint32 [k+1].
+    Returns (p int32 [C], q int32 [k, C]); EMPTY rows map to (n, r1)
+    out-of-range sentinels.
+    """
+    valid = indices != EMPTY
+    p = (hash_u32(indices, seeds[0]) % jnp.uint32(n)).astype(jnp.int32)
+    qs = []
+    for i in range(1, seeds.shape[0]):
+        q = (hash_u32(indices, seeds[i]) % jnp.uint32(r1)).astype(jnp.int32)
+        qs.append(jnp.where(valid, q, r1))
+    return jnp.where(valid, p, n), jnp.stack(qs)
+
+
+def bitmap_pack_ref(bits: jnp.ndarray) -> jnp.ndarray:
+    """int32 0/1 [W*32] -> uint32 [W] packed words (LSB-first)."""
+    w = bits.reshape(-1, BITS).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(BITS, dtype=jnp.uint32)
+    return jnp.sum(w * weights, axis=1, dtype=jnp.uint32)
+
+
+def bitmap_unpack_ref(words: jnp.ndarray) -> jnp.ndarray:
+    """uint32 [W] -> int32 0/1 [W*32]."""
+    weights = jnp.uint32(1) << jnp.arange(BITS, dtype=jnp.uint32)
+    bits = (words[:, None] & weights[None, :]) != 0
+    return bits.reshape(-1).astype(jnp.int32)
+
+
+def coo_scatter_add_ref(out_rows: int, idx: jnp.ndarray,
+                        vals: jnp.ndarray) -> jnp.ndarray:
+    """Server-side aggregation oracle: out[idx[i]] += vals[i]; idx EMPTY or
+    >= out_rows are dropped. vals [C, d] -> out [out_rows, d]."""
+    out = jnp.zeros((out_rows, vals.shape[-1]), vals.dtype)
+    tgt = jnp.where((idx == EMPTY) | (idx >= out_rows), out_rows, idx)
+    return out.at[tgt].add(vals, mode="drop")

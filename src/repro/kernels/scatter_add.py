@@ -1,0 +1,66 @@
+"""Pallas-TPU kernel: server-side COO row aggregation (scatter-add).
+
+The Pull-side hot loop of Zen: accumulate pushed (index, row-value) pairs
+into the server's compact partition buffer.  On GPU this is atomicAdd; on
+TPU the *sequential* grid makes read-modify-write race-free, so the kernel
+is a plain RMW loop over the tile's entries — the TPU-idiomatic equivalent
+(DESIGN.md §3).
+
+The output buffer is aliased with an input (in-place accumulation); the
+value width d should be lane-aligned (multiples of 128) for real-TPU
+efficiency; interpret-mode validation accepts any d.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import EMPTY
+
+BLOCK_C = 256
+
+
+def _kernel(idx_ref, vals_ref, out_in_ref, out_ref, *, rows: int):
+    # out_ref aliases out_in_ref (input_output_aliases) and starts with its
+    # contents; all RMW goes through out_ref.
+    del out_in_ref
+    def body(i, _):
+        ix = idx_ref[i]
+        ok = (ix != EMPTY) & (ix < rows) & (ix >= 0)
+        safe = jnp.where(ok, ix, 0)
+        row = pl.load(out_ref, (pl.dslice(safe, 1), slice(None)))
+        val = vals_ref[i, :][None, :]
+        upd = row + jnp.where(ok, val, 0).astype(row.dtype)
+        pl.store(out_ref, (pl.dslice(safe, 1), slice(None)), upd)
+        return 0
+
+    jax.lax.fori_loop(0, idx_ref.shape[0], body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def coo_scatter_add(out: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray,
+                    *, interpret: bool = True) -> jnp.ndarray:
+    """out [M, d] += scatter(vals [C, d] at idx [C]); returns new out.
+
+    EMPTY / out-of-range indices are dropped.
+    """
+    C = idx.shape[0]
+    M, d = out.shape
+    bc = min(BLOCK_C, C)
+    assert C % bc == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, rows=M),
+        grid=(C // bc,),
+        in_specs=[
+            pl.BlockSpec((bc,), lambda i: (i,)),
+            pl.BlockSpec((bc, d), lambda i: (i, 0)),
+            pl.BlockSpec((M, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((M, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, d), out.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(idx, vals, out)

@@ -1,0 +1,90 @@
+"""Pallas-TPU kernel: Mamba2 SSD chunk scan (forward).
+
+The jnp chunked SSD (`repro.models.ssm._ssd_chunked`) materializes the
+[Q, Q] decay kernel and [Q, N] state updates in HBM per (chunk, head); this
+kernel keeps the whole chunk-step working set in VMEM and carries the SSD
+state in persistent scratch across the sequential TPU grid (the TPU grid is
+ordered, so the recurrence is race-free — same property the scatter-add
+kernel relies on).
+
+Grid: (B*H, n_chunks) with chunks minor (sequential recurrence).
+Per-program blocks: dA [Q], x [Q, hd], Bm/Cm [Q, N]; scratch state [hd, N].
+Validated against the pure-jnp oracle in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(dA_ref, x_ref, b_ref, c_ref, y_ref, state_out_ref, state_ref):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    dA = dA_ref[...].astype(jnp.float32)          # [Q]
+    x = x_ref[...].astype(jnp.float32)            # [Q, hd]
+    Bm = b_ref[...].astype(jnp.float32)           # [Q, N]
+    Cm = c_ref[...].astype(jnp.float32)           # [Q, N]
+    Q = dA.shape[0]
+
+    cs = jnp.cumsum(dA)                           # [Q]
+    total = cs[-1]
+    # intra-chunk: lower-triangular decay kernel
+    li = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.where(lj <= li, jnp.exp(cs[:, None] - cs[None, :]), 0.0)
+    sBC = Cm @ Bm.T                               # [Q, Q]
+    y_in = (sBC * decay) @ x                      # [Q, hd]
+    # inter-chunk: carried state contribution
+    state = state_ref[...]
+    y_st = jnp.exp(cs)[:, None] * (Cm @ state.T)  # [Q, hd]
+    y_ref[...] = (y_in + y_st).astype(y_ref.dtype)
+    # state update
+    w = jnp.exp(total - cs)                       # [Q]
+    dS = (x * w[:, None]).T @ Bm                  # [hd, N]
+    state_ref[...] = state * jnp.exp(total) + dS
+    state_out_ref[...] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_fwd(xh, dA, Bm, Cm, *, chunk: int = 64, interpret: bool = True):
+    """Chunked SSD scan via Pallas.
+
+    xh: [BH, S, hd] (head-major, dt pre-multiplied into xh);
+    dA: [BH, S] log-decays (dt * A); Bm, Cm: [BH, S, N] (expanded per head).
+    Returns (y [BH, S, hd], final state [BH, hd, N]).
+    """
+    BH, S, hd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nC = S // Q
+    grid = (BH, nC)
+    y, state = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, Q), lambda h, c: (h, c)),
+            pl.BlockSpec((None, Q, hd), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((None, Q, N), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((None, Q, N), lambda h, c: (h, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, Q, hd), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((None, hd, N), lambda h, c: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BH, hd, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32)],
+        interpret=interpret,
+    )(dA, xh, Bm, Cm)
+    return y, state

@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (device count is locked at first use).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e production mesh: 16x16 = 256 chips per pod; 2 pods = 512 chips.
+
+    Axes: ``data`` (batch / ZeRO) x ``model`` (tensor/expert parallel),
+    plus ``pod`` (data-parallel across pods) in the multi-pod mesh.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests / examples), e.g. ((1, 1), ('data', 'model'))."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,101 @@
+"""Training launcher.
+
+Examples:
+  # smoke-scale local run (1 device)
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \\
+      --steps 50 --seq-len 128 --global-batch 4 --mesh 1x1
+
+  # production config (real TPU pod; mesh 16x16)
+  PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b \\
+      --steps 1000 --seq-len 4096 --global-batch 256 --mesh 16x16 \\
+      --sync zen
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.io import restore, save
+from repro.configs import ALL_ARCHS, get_config
+from repro.core.zen import SyncConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_mesh
+from repro.optim.optimizers import OptConfig
+from repro.train.build import attach_train, build_program
+from repro.train.steps import TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ALL_ARCHS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--mesh", default="1x1",
+                    help="DxM or PxDxM, e.g. 16x16 or 2x16x16")
+    ap.add_argument("--sync", default="zen",
+                    choices=["zen", "dense", "agsparse", "sparcml",
+                             "sparse_ps", "omnireduce"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--density-budget", type=float, default=0.25)
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    dims = [int(x) for x in args.mesh.split("x")]
+    axes = ("pod", "data", "model")[-len(dims):]
+    mesh = make_mesh(tuple(dims), axes)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tcfg = TrainerConfig(
+        opt=OptConfig(lr=args.lr),
+        sync=SyncConfig(scheme=args.sync,
+                        density_budget=args.density_budget),
+        zero1=not args.no_zero1)
+    prog = build_program(cfg, mesh, tcfg)
+    attach_train(prog, args.seq_len, args.global_batch)
+    params = prog.init_params(args.seed)
+    opt = prog.init_opt(params)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params / 1e6:.1f}M mesh={args.mesh} "
+          f"sync={args.sync}")
+
+    data = iter(SyntheticLM(cfg, DataConfig(
+        seq_len=args.seq_len, batch=args.global_batch, seed=args.seed)))
+    t0 = time.time()
+    tokens_done = 0
+    for step in range(args.steps):
+        b = next(data)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, m = prog.train_step(params, opt, batch)
+        tokens_done += args.global_batch * args.seq_len
+        if step % args.log_every == 0 or step == args.steps - 1:
+            jax.block_until_ready(m["loss"])
+            dt = time.time() - t0
+            print(f"step {step:5d} loss={float(m['loss']):.4f} "
+                  f"tok/s={tokens_done / dt:,.0f} "
+                  f"sparse_words={float(m['sync/sparse_sent_words']):,.0f} "
+                  f"overflow={int(float(m['sync/overflow']))}")
+        if args.ckpt_dir and args.ckpt_every and \
+                step and step % args.ckpt_every == 0:
+            save(Path(args.ckpt_dir) / f"step_{step}",
+                 {"params": params, "step": jnp.asarray(step)})
+    if args.ckpt_dir:
+        save(Path(args.ckpt_dir) / "final",
+             {"params": params, "step": jnp.asarray(args.steps)})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

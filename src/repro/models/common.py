@@ -1,0 +1,335 @@
+"""Model-zoo foundations: architecture config, shard context, param utilities.
+
+Everything model-side runs *inside* ``shard_map`` (Megatron-style explicit
+tensor parallelism) so gradient synchronization — the paper's subject — is an
+explicit, schedulable operation rather than a compiler insertion.  Parameters
+are global arrays with a mirrored ``PartitionSpec`` tree; inside the shard_map
+region each leaf is its local shard.
+
+Sharding rules (DESIGN.md §5):
+  * MLP / expert / SSM inner dims: column→row parallel over ``model``
+    (always divisible for the assigned zoo).
+  * Attention q-heads: sharded over ``model`` iff ``n_heads % tp == 0``,
+    else replicated (qwen2-0.5b 14H, phi4-mini 24H, minicpm3 40H).
+  * KV projections: always replicated (kv-head counts are small and rarely
+    divide tp; the FLOP share is negligible).
+  * Embedding / LM head: vocab-sharded over ``model`` (vocab padded to a
+    multiple of 128 — standard practice; padded ids are never produced).
+  * Decode KV cache: sequence-sharded over ``model`` (round-robin slots) —
+    works for any head count and divides cache HBM by tp.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+def pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One assigned architecture (exact sizes from the assignment block)."""
+
+    name: str
+    kind: str                  # dense | moe | ssm | hybrid | enc_dec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0          # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # --- SSM (mamba2 / hybrid) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 64
+    # --- hybrid (zamba2-style shared attention block) ---
+    shared_attn_every: int = 0     # apply shared attn block every k ssm layers
+    # --- MLA (minicpm3) ---
+    mla_q_rank: int = 0            # 0 -> standard GQA
+    mla_kv_rank: int = 0
+    mla_rope_dim: int = 32
+    mla_v_dim: int = 64
+    # --- enc-dec (whisper backbone) ---
+    n_enc_layers: int = 0
+    enc_len: int = 1500            # encoder frames (stub embeddings)
+    # --- vlm ---
+    n_patches: int = 0             # patch-embedding prefix length (stub)
+    # --- long-context ---
+    sliding_window: int = 4096     # used by long_500k decode for attn archs
+    # --- numerics ---
+    dtype: Any = jnp.bfloat16
+    source: str = ""               # citation
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_attn_free(self) -> bool:
+        return self.kind == "ssm"
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def vocab_padded(self, tp: int) -> int:
+        return pad_to(self.vocab, max(128, tp))
+
+    def n_params(self) -> int:
+        """Approximate parameter count (for roofline MODEL_FLOPS)."""
+        d, L = self.d_model, self.n_layers
+        emb = self.vocab * d
+        if self.kind == "ssm":
+            din = self.d_inner
+            per = (d * (2 * din + 2 * self.ssm_heads + 2 * self.ssm_state)
+                   + din * d + din * self.ssm_conv)
+            return emb + L * per
+        attn = d * (self.n_heads * self.hd) * 2 + d * (self.n_kv * self.hd) * 2
+        if self.mla_q_rank:
+            attn = (d * self.mla_q_rank
+                    + self.mla_q_rank * self.n_heads * (self.hd + self.mla_rope_dim)
+                    + d * (self.mla_kv_rank + self.mla_rope_dim)
+                    + self.mla_kv_rank * self.n_heads * (self.hd + self.mla_v_dim)
+                    + self.n_heads * self.mla_v_dim * d)
+        if self.kind == "moe":
+            ffn = self.n_experts * 3 * d * self.d_ff + d * self.n_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        per = attn + ffn
+        total = emb + L * per
+        if self.kind == "enc_dec":
+            total += self.n_enc_layers * (attn + ffn) + L * attn  # cross-attn
+        if self.kind == "hybrid":
+            din = self.d_inner
+            ssm_per = (d * (2 * din + 2 * self.ssm_heads + 2 * self.ssm_state)
+                       + din * d + din * self.ssm_conv)
+            n_shared = L // max(self.shared_attn_every, 1)
+            total = emb + L * ssm_per + (attn + ffn)  # one shared block
+            del n_shared
+        return total
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE uses top_k of n_experts)."""
+        if self.kind != "moe":
+            return self.n_params()
+        d, L = self.d_model, self.n_layers
+        attn = d * (self.n_heads * self.hd) * 2 + d * (self.n_kv * self.hd) * 2
+        ffn = self.top_k * 3 * d * self.d_ff + d * self.n_experts
+        return self.vocab * d + L * (attn + ffn)
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: 2 layers, d_model<=256, <=4 experts."""
+        return dataclasses.replace(
+            self,
+            n_layers=2,
+            n_enc_layers=min(self.n_enc_layers, 2),
+            d_model=256,
+            n_heads=4,
+            n_kv=min(self.n_kv, 2) if self.n_kv < self.n_heads else 4,
+            head_dim=64,
+            d_ff=384,
+            vocab=512,
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            mla_q_rank=min(self.mla_q_rank, 64),
+            mla_kv_rank=min(self.mla_kv_rank, 32),
+            enc_len=min(self.enc_len, 24),
+            n_patches=min(self.n_patches, 8),
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_chunk=16,
+            sliding_window=128,
+            shared_attn_every=min(self.shared_attn_every, 1) or self.shared_attn_every,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Shard context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh axes + per-family sharding decisions, fixed at build time."""
+
+    tp: int                        # model-axis size
+    dp: int                        # data-axis size
+    pods: int = 1
+    tp_axis: str = "model"
+    dp_axis: str = "data"
+    pod_axis: Optional[str] = None
+    shard_heads: bool = True       # q-heads over tp (set from cfg)
+    decode_seq_shard: bool = True  # KV cache sequence-sharded over tp
+    # §Perf optimization: pad q-heads up to a tp multiple so attention can
+    # shard instead of replicating (qwen2 14->16, phi4 24->32, minicpm3
+    # 40->48).  Padded heads are zero-initialized: the function at init is
+    # exactly the spec architecture; under training they become (tiny)
+    # extra capacity — the standard Megatron-style padding trade-off.
+    h_pad: int = 0                 # 0 = no padding; else the padded H
+    # §Perf optimization: token-sharded MoE dispatch over the model axis
+    # (two all-to-alls instead of a full-activation psum) — see moe.py
+    moe_a2a: bool = False
+
+    @property
+    def batch_axes(self):
+        return (self.pod_axis, self.dp_axis) if self.pod_axis else (self.dp_axis,)
+
+    def tp_rank(self):
+        return lax.axis_index(self.tp_axis)
+
+    def psum_tp(self, x):
+        return lax.psum(x, self.tp_axis) if self.tp > 1 else x
+
+    def pmax_tp(self, x):
+        """Cross-rank max, treated as a constant under differentiation
+        (used only for numerical-stability shifts; ``pmax`` has no JVP rule).
+        """
+        if self.tp == 1:
+            return x
+        axis = self.tp_axis
+
+        @jax.custom_jvp
+        def f(y):
+            return lax.pmax(y, axis)
+
+        @f.defjvp
+        def _jvp(primals, tangents):
+            (y,) = primals
+            return f(y), jnp.zeros_like(y)
+
+        return f(x)
+
+
+def make_ctx(cfg: ArchConfig, tp: int, dp: int, pods: int = 1,
+             pad_heads: bool = False, moe_a2a: bool = False) -> ShardCtx:
+    h_pad = 0
+    shard = cfg.n_heads % tp == 0
+    if pad_heads and not shard and cfg.n_heads > 0:
+        h_pad = pad_to(cfg.n_heads, tp)
+        shard = True
+    return ShardCtx(
+        tp=tp, dp=dp, pods=pods,
+        pod_axis="pod" if pods > 1 else None,
+        shard_heads=shard,
+        h_pad=h_pad,
+        moe_a2a=moe_a2a,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization helpers (global arrays + mirrored PartitionSpecs)
+# ---------------------------------------------------------------------------
+
+class ParamBuilder:
+    """Collects (value, spec) pairs into mirrored pytrees.
+
+    ``abstract=True`` records ``jax.ShapeDtypeStruct`` leaves instead of
+    materializing arrays — used by the dry-run and by spec-tree construction
+    (no allocation, no RNG).
+    """
+
+    def __init__(self, key: jax.Array | None, dtype=jnp.bfloat16,
+                 abstract: bool = False):
+        self._key = key
+        self.dtype = dtype
+        self.abstract = abstract
+        self.params: dict = {}
+        self.specs: dict = {}
+
+    def next_key(self) -> jax.Array | None:
+        if self.abstract:
+            return None
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _put(self, name, shape, dtype, make):
+        if self.abstract:
+            self.params[name] = jax.ShapeDtypeStruct(tuple(shape), dtype)
+        else:
+            self.params[name] = make()
+
+    def dense(self, name: str, shape, spec: P, scale: float | None = None,
+              dtype=None):
+        fan_in = shape[0] if len(shape) > 1 else shape[-1]
+        scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+        dt = dtype or self.dtype
+        self._put(name, shape, dt,
+                  lambda: (jax.random.normal(self.next_key(), shape,
+                                             jnp.float32) * scale).astype(dt))
+        self.specs[name] = spec
+
+    def zeros(self, name: str, shape, spec: P, dtype=None):
+        dt = dtype or self.dtype
+        self._put(name, shape, dt, lambda: jnp.zeros(shape, dt))
+        self.specs[name] = spec
+
+    def ones(self, name: str, shape, spec: P, dtype=None):
+        dt = dtype or self.dtype
+        self._put(name, shape, dt, lambda: jnp.ones(shape, dt))
+        self.specs[name] = spec
+
+    def const(self, name: str, value, spec: P):
+        if self.abstract:
+            self.params[name] = jax.ShapeDtypeStruct(value.shape, value.dtype)
+        else:
+            self.params[name] = value
+        self.specs[name] = spec
+
+    def child(self, name: str) -> "ParamBuilder":
+        sub = ParamBuilder(self.next_key(), self.dtype, self.abstract)
+        self.params[name] = sub.params
+        self.specs[name] = sub.specs
+        return sub
+
+    def stacked(self, name: str, n: int, init_fn) -> None:
+        """Stack ``n`` copies of a sub-module's params along a new leading
+        layer axis (for ``lax.scan`` over layers)."""
+        if self.abstract:
+            b = ParamBuilder(None, self.dtype, abstract=True)
+            init_fn(b)
+            self.params[name] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype),
+                b.params)
+        else:
+            subs = []
+            spec = None
+            for _ in range(n):
+                b = ParamBuilder(self.next_key(), self.dtype)
+                init_fn(b)
+                subs.append(b.params)
+                spec = b.specs
+            self.params[name] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *subs)
+        if self.abstract:
+            bs = ParamBuilder(None, self.dtype, abstract=True)
+            init_fn(bs)
+            spec = bs.specs
+
+        def lift(s: P) -> P:
+            return P(None, *s)
+
+        self.specs[name] = jax.tree.map(
+            lift, spec, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,204 @@
+"""Mixture-of-Experts FFN with expert parallelism over the ``model`` axis.
+
+Activations are replicated across ``model`` (they are sharded over ``data``
+only), so expert parallelism needs no token all-to-all: each model-rank
+gathers the tokens routed to its local experts, runs the expert FFNs, and the
+partial outputs are combined by the row-parallel psum that follows.  Capacity
+is fixed (static shapes): ``cap = ceil(T * top_k / E * capacity_factor)``;
+dropped-token and load-balance statistics are returned for the router-skew
+analysis (the MoE analogue of the paper's Def. 5 skew).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ArchConfig, ParamBuilder, ShardCtx
+from repro.models import layers as L
+
+
+def init_moe(b: ParamBuilder, name: str, cfg: ArchConfig, ctx: ShardCtx):
+    sub = b.child(name)
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    assert E % ctx.tp == 0, (E, ctx.tp)
+    sub.dense("router_w", (d, E), P(None, None), scale=0.02)
+    # expert weights: [E, ...] sharded over model on the expert dim
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(f)
+    sub.dense("w_gate", (E, d, f), P("model", None, None), scale=scale_in)
+    sub.dense("w_up", (E, d, f), P("model", None, None), scale=scale_in)
+    sub.dense("w_down", (E, f, d), P("model", None, None), scale=scale_out)
+
+
+def moe_ffn(p, name, x, cfg: ArchConfig, ctx: ShardCtx):
+    """Dispatch-strategy switch: baseline replicated-token dispatch, or the
+    §Perf token-sharded all-to-all dispatch (``ctx.moe_a2a``)."""
+    tokens = x.shape[0] * x.shape[1]
+    if (getattr(ctx, "moe_a2a", False) and ctx.tp > 1
+            and tokens % ctx.tp == 0):
+        return moe_ffn_a2a(p, name, x, cfg, ctx)
+    # decode steps (T < tp) and non-divisible token counts use the
+    # replicated dispatch
+    return moe_ffn_replicated(p, name, x, cfg, ctx)
+
+
+def moe_ffn_replicated(p, name, x, cfg: ArchConfig, ctx: ShardCtx):
+    """x [B, S, d] -> (y [B, S, d], stats dict)."""
+    sub = p[name]
+    Bt, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    El = E // ctx.tp
+    T = Bt * S
+    xf = x.reshape(T, d)
+
+    # ---- routing (replicated) ----------------------------------------------
+    logits = (xf @ sub["router_w"].astype(xf.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                 # [T, K]
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)  # renormalize top-k
+
+    # ---- dispatch: rank within each expert's queue ---------------------------
+    cap = max(1, int(math.ceil(T * K / E * cfg.capacity_factor)))
+    flat_e = eidx.reshape(T * K)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    pos_in_e = jnp.arange(T * K) - jnp.searchsorted(sorted_e, sorted_e,
+                                                    side="left")
+    rank_in_e = jnp.zeros(T * K, jnp.int32).at[order].set(
+        pos_in_e.astype(jnp.int32))
+    keep = rank_in_e < cap
+    slot = flat_e * cap + rank_in_e                      # [T*K] in [0, E*cap)
+
+    # scatter token ids into the global dispatch buffer, slice local experts
+    tok_of = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    buf_tok = jnp.full((E * cap,), T, jnp.int32)         # T = sentinel
+    buf_tok = buf_tok.at[jnp.where(keep, slot, E * cap)].set(
+        tok_of, mode="drop")
+    buf_gate = jnp.zeros((E * cap,), jnp.float32).at[
+        jnp.where(keep, slot, E * cap)].set(gate.reshape(-1), mode="drop")
+    r = ctx.tp_rank() if ctx.tp > 1 else 0
+    loc_tok = jax.lax.dynamic_slice(buf_tok, (r * El * cap,),
+                                    (El * cap,)).reshape(El, cap)
+    loc_gate = jax.lax.dynamic_slice(buf_gate, (r * El * cap,),
+                                     (El * cap,)).reshape(El, cap)
+
+    # ---- expert FFN (vmapped over local experts) -----------------------------
+    safe_tok = jnp.where(loc_tok == T, 0, loc_tok)
+    xin = xf[safe_tok]                                   # [El, cap, d]
+    xin = jnp.where((loc_tok == T)[..., None], 0, xin)
+
+    def expert(wg, wu, wd, xi):
+        h = jax.nn.silu(xi @ wg) * (xi @ wu)
+        return h @ wd
+
+    yex = jax.vmap(expert)(sub["w_gate"], sub["w_up"], sub["w_down"], xin)
+    yex = yex * loc_gate[..., None].astype(yex.dtype)
+
+    # ---- combine: scatter-add back, psum over model --------------------------
+    out = jnp.zeros((T, d), yex.dtype)
+    out = out.at[loc_tok.reshape(-1)].add(yex.reshape(-1, d), mode="drop")
+    out = ctx.psum_tp(out)
+
+    # ---- stats ----------------------------------------------------------------
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    # (scatter-add histogram, not one_hot — avoids a [T, K, E] transient)
+    f_e = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(1.0) / T  # [E]
+    p_e = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f_e / K * p_e)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    # router skew ≙ Def. 5: max expert load / mean load
+    skew = jnp.max(f_e) / jnp.maximum(jnp.mean(f_e), 1e-9)
+    stats = {"moe/aux_loss": aux, "moe/dropped": dropped, "moe/skew": skew}
+    return out.reshape(Bt, S, d).astype(x.dtype), stats
+
+
+def moe_ffn_a2a(p, name, x, cfg: ArchConfig, ctx: ShardCtx):
+    """§Perf token-sharded expert dispatch (beyond-paper optimization).
+
+    Baseline replicates routing+dispatch over the model axis and combines
+    expert outputs with a full-activation psum (2(g-1)/g * T*d on the wire
+    per layer).  Here each model rank routes only its T/tp token slice and
+    ships tokens to expert owners with two all-to-alls, then all-gathers
+    the sharded output: wire ~ (2*K*cf/tp + 1) * (g-1)/g * T*d — ~35% less
+    at phi3.5's K=2, and 16x less routing/dispatch compute and buffers.
+    Equivalent to the baseline up to capacity-drop boundaries
+    (per-slice instead of global capacity).
+    """
+    sub = p[name]
+    Bt, S, d = x.shape
+    E, K, tp = cfg.n_experts, cfg.top_k, ctx.tp
+    El = E // tp
+    T = Bt * S
+    assert T % tp == 0
+    Tl = T // tp
+    r = ctx.tp_rank()
+    xf = x.reshape(T, d)
+    xl = jax.lax.dynamic_slice(xf, (r * Tl, jnp.int32(0)), (Tl, d))
+
+    # ---- local routing on the token slice -----------------------------------
+    logits = (xl @ sub["router_w"].astype(xl.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                  # [Tl, K]
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # ---- local dispatch into per-(expert) queues -----------------------------
+    cap = max(1, int(math.ceil(Tl * K / E * cfg.capacity_factor)))
+    flat_e = eidx.reshape(Tl * K)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    pos_in_e = jnp.arange(Tl * K) - jnp.searchsorted(sorted_e, sorted_e,
+                                                     side="left")
+    rank_in_e = jnp.zeros(Tl * K, jnp.int32).at[order].set(
+        pos_in_e.astype(jnp.int32))
+    keep = rank_in_e < cap
+    slot = flat_e * cap + rank_in_e
+    tok_of = jnp.repeat(jnp.arange(Tl, dtype=jnp.int32), K)
+    buf_tok = jnp.full((E * cap,), Tl, jnp.int32).at[
+        jnp.where(keep, slot, E * cap)].set(tok_of, mode="drop")
+    buf_gate = jnp.zeros((E * cap,), jnp.float32).at[
+        jnp.where(keep, slot, E * cap)].set(gate.reshape(-1), mode="drop")
+    safe_tok = jnp.where(buf_tok == Tl, 0, buf_tok)
+    xin = xl[safe_tok]
+    xin = jnp.where((buf_tok == Tl)[:, None], 0, xin)     # [E*cap, d]
+
+    # ---- ship tokens to expert owners (all-to-all over model) ---------------
+    send = xin.reshape(tp, El * cap, d)
+    recv = lax.all_to_all(send, ctx.tp_axis, split_axis=0, concat_axis=0)
+    g_send = buf_gate.reshape(tp, El * cap)
+    g_recv = lax.all_to_all(g_send, ctx.tp_axis, split_axis=0, concat_axis=0)
+
+    # ---- expert FFN on my El experts, tokens from every source rank ---------
+    xin_e = recv.reshape(tp, El, cap, d).transpose(1, 0, 2, 3) \
+                .reshape(El, tp * cap, d)
+
+    def expert(wg, wu, wd, xi):
+        h = jax.nn.silu(xi @ wg) * (xi @ wu)
+        return h @ wd
+
+    yex = jax.vmap(expert)(sub["w_gate"], sub["w_up"], sub["w_down"], xin_e)
+    g_e = g_recv.reshape(tp, El, cap).transpose(1, 0, 2).reshape(El, tp * cap)
+    yex = yex * g_e[..., None].astype(yex.dtype)
+
+    # ---- ship results back, combine into the local token slice ---------------
+    back = yex.reshape(El, tp, cap, d).transpose(1, 0, 2, 3) \
+              .reshape(tp, El * cap, d)
+    got = lax.all_to_all(back, ctx.tp_axis, split_axis=0, concat_axis=0)
+    out_l = jnp.zeros((Tl, d), got.dtype)
+    out_l = out_l.at[buf_tok].add(got.reshape(E * cap, d), mode="drop")
+
+    # ---- restore replication --------------------------------------------------
+    out = lax.all_gather(out_l, ctx.tp_axis, tiled=True)  # [T, d]
+
+    f_e = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(1.0) / Tl
+    f_e = lax.pmean(f_e, ctx.tp_axis)
+    p_e = lax.pmean(jnp.mean(probs, axis=0), ctx.tp_axis)
+    aux = E * jnp.sum(f_e / K * p_e)
+    dropped = lax.pmean(1.0 - jnp.mean(keep.astype(jnp.float32)),
+                        ctx.tp_axis)
+    skew = jnp.max(f_e) / jnp.maximum(jnp.mean(f_e), 1e-9)
+    stats = {"moe/aux_loss": aux, "moe/dropped": dropped, "moe/skew": skew}
+    return out.reshape(Bt, S, d).astype(x.dtype), stats

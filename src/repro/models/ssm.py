@@ -1,0 +1,191 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training uses the chunked block decomposition: within-chunk quadratic
+(attention-like) term + inter-chunk recurrent state pass via ``lax.scan``.
+Decode is the O(1) recurrence on the [B, H, hd, dstate] state.
+
+Tensor parallelism: SSM heads (d_inner / head_dim) are column-parallel over
+``model`` (always divisible in the assigned zoo); B/C projections are
+replicated (they are shared across heads, ngroups=1); out-proj is
+row-parallel.  The scan itself is purely local — the paper's technique does
+not apply to the recurrence (DESIGN.md §4) and gradients of SSM parameters
+are dense.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ArchConfig, ParamBuilder, ShardCtx
+from repro.models import layers as L
+
+
+def _heads_local(cfg: ArchConfig, ctx: ShardCtx) -> int:
+    assert cfg.ssm_heads % ctx.tp == 0, (cfg.ssm_heads, ctx.tp)
+    return cfg.ssm_heads // ctx.tp
+
+
+def init_mamba2(b: ParamBuilder, name: str, cfg: ArchConfig, ctx: ShardCtx):
+    sub = b.child(name)
+    d, din, hs = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.ssm_heads
+    # z (gate) and x: SEPARATE column-parallel projections — packing them
+    # into one matrix would interleave z/x columns across TP ranks
+    L.init_linear(sub, "in_z", d, din, mode="col", tp=ctx.tp)
+    L.init_linear(sub, "in_x", d, din, mode="col", tp=ctx.tp)
+    L.init_linear(sub, "in_dt", d, H, mode="col", tp=ctx.tp)
+    L.init_linear(sub, "in_bc", d, 2 * hs, mode="rep", tp=ctx.tp)  # shared B, C
+    L.init_linear(sub, "out", din, d, mode="row", tp=ctx.tp)
+    sub.dense("conv_w", (cfg.ssm_conv, din), P(None, "model"), scale=0.5)
+    sub.zeros("conv_b", (din,), P("model"))
+    sub.const("A_log", jnp.zeros((H,), jnp.float32), P("model"))
+    sub.zeros("dt_bias", (H,), P("model"), dtype=jnp.float32)
+    sub.zeros("D", (H,), P("model"), dtype=jnp.float32)
+    # gated norm over the sharded d_inner dim: scale is model-sharded and
+    # the variance is psum'd (layers.rmsnorm_sharded)
+    sub.ones("norm", (din,), P("model"), dtype=jnp.float32)
+    # fix replicated-vs-sharded specs for per-head vectors
+    if ctx.tp == 1:
+        sub.specs["A_log"] = P(None)
+        sub.specs["dt_bias"] = P(None)
+        sub.specs["D"] = P(None)
+        sub.specs["norm"] = P(None)
+
+
+def _causal_conv(x, w, bias):
+    """Depthwise causal conv1d. x [B, S, C], w [K, C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, k:k + x.shape[1], :] * w[k] for k in range(K))
+    return y + bias
+
+
+def _ssd_chunked(xh, dt, a_log, B, C, D, chunk: int):
+    """Chunked SSD scan.
+
+    xh: [Bt, S, H, hd]; dt: [Bt, S, H] (post-softplus); a_log: [H] (A = -exp);
+    B, C: [Bt, S, N]; D: [H].  Returns y [Bt, S, H, hd] and final state
+    [Bt, H, hd, N].
+    """
+    Bt, S, H, hd = xh.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        # zero-padded steps are identity: dt=0 => decay=1, input=0
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    S_p = S + pad
+    nC = S_p // Q
+    A = -jnp.exp(a_log)                                   # [H] negative
+    dA = dt * A[None, None, :]                            # [Bt, S, H] log-decay
+    xdt = xh * dt[..., None]                              # input scaled by dt
+
+    # reshape into chunks
+    def ch(t):
+        return t.reshape(Bt, nC, Q, *t.shape[2:]).swapaxes(0, 1)
+    dA_c, x_c, B_c, C_c = ch(dA), ch(xdt), ch(B), ch(C)   # leading nC
+
+    def chunk_step(state, inp):
+        dA_q, x_q, B_q, C_q = inp                          # [Bt,Q,H,..]
+        cs = jnp.cumsum(dA_q, axis=1)                      # [Bt,Q,H]
+        total = cs[:, -1]                                  # [Bt,H]
+        # intra-chunk (lower-triangular decay kernel)
+        Lmat = cs[:, :, None, :] - cs[:, None, :, :]       # [Bt,Qi,Qj,H]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(Lmat), 0.0)
+        sBC = jnp.einsum("bin,bjn->bij", C_q, B_q)         # [Bt,Qi,Qj]
+        y_in = jnp.einsum("bij,bijh,bjhd->bihd", sBC, decay, x_q)
+        # inter-chunk: contribution of carried state
+        y_st = jnp.einsum("bin,bhdn,bih->bihd", C_q, state, jnp.exp(cs))
+        # state update
+        w = jnp.exp(total[:, None, :] - cs)                # [Bt,Q,H]
+        dS = jnp.einsum("bqhd,bqn,bqh->bhdn", x_q, B_q, w)
+        state = state * jnp.exp(total)[:, :, None, None] + dS
+        return state, y_in + y_st
+
+    s0 = jnp.zeros((Bt, H, hd, N), jnp.float32)
+    state, y = lax.scan(chunk_step, s0, (dA_c, x_c, B_c, C_c))
+    y = y.swapaxes(0, 1).reshape(Bt, S_p, H, hd)[:, :S]
+    return y + xh[:, :S] * D[None, None, :, None], state
+
+
+def mamba2_train(p, name, x, cfg: ArchConfig, ctx: ShardCtx,
+                 return_cache: bool = False):
+    """Full-sequence Mamba2 block. x [B, S, d] -> [B, S, d].
+
+    ``return_cache=True`` also returns the decode cache (final SSD state +
+    conv tail) so prefill hands off to recurrent decode exactly."""
+    sub = p[name]
+    Bt, S, _ = x.shape
+    Hl = _heads_local(cfg, ctx)
+    hd, N = cfg.ssm_head_dim, cfg.ssm_state
+    z = L.linear_col(sub, "in_z", x)
+    xs_raw = L.linear_col(sub, "in_x", x)
+    dinl = xs_raw.shape[-1]
+    xs = jax.nn.silu(_causal_conv(xs_raw, sub["conv_w"], sub["conv_b"]))
+    dt = jax.nn.softplus(
+        L.linear_col(sub, "in_dt", x).astype(jnp.float32)
+        + sub["dt_bias"][None, None])
+    bc = L.linear_rep(sub, "in_bc", x).astype(jnp.float32)
+    Bm, Cm = bc[..., :N], bc[..., N:]
+    xh = xs.reshape(Bt, S, Hl, hd).astype(jnp.float32)
+    y, state = _ssd_chunked(xh, dt, sub["A_log"], Bm, Cm, sub["D"],
+                            cfg.ssm_chunk)
+    y = y.reshape(Bt, S, dinl).astype(x.dtype)
+    y = L.rmsnorm_sharded(sub["norm"], y * jax.nn.silu(z), ctx)
+    out = L.linear_row(sub, "out", y, ctx)
+    if return_cache:
+        K = cfg.ssm_conv
+        cache = {"state": state, "conv": xs_raw[:, S - (K - 1):, :]}
+        return out, cache
+    return out
+
+
+def mamba2_make_cache(cfg: ArchConfig, ctx: ShardCtx, batch: int,
+                      dtype=jnp.float32):
+    Hl = cfg.ssm_heads // ctx.tp
+    return {
+        "state": jnp.zeros((batch, Hl, cfg.ssm_head_dim, cfg.ssm_state),
+                           jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1,
+                           cfg.d_inner // ctx.tp), dtype),
+    }
+
+
+def mamba2_decode(p, name, x, cache, cfg: ArchConfig, ctx: ShardCtx):
+    """One-token recurrence. x [B, d]. O(1) in sequence length — this is why
+    mamba2/zamba2 run long_500k natively."""
+    sub = p[name]
+    Bt = x.shape[0]
+    Hl = _heads_local(cfg, ctx)
+    hd, N = cfg.ssm_head_dim, cfg.ssm_state
+    z = L.linear_col(sub, "in_z", x)
+    xs = L.linear_col(sub, "in_x", x)
+    dinl = xs.shape[-1]
+    # conv cache: [B, K-1, dinl]
+    conv_in = jnp.concatenate([cache["conv"], xs[:, None, :]], axis=1)
+    w = sub["conv_w"]
+    y_conv = jnp.einsum("bkc,kc->bc", conv_in, w) + sub["conv_b"]
+    xs = jax.nn.silu(y_conv)
+    new_conv = conv_in[:, 1:]
+    dt = jax.nn.softplus(
+        L.linear_col(sub, "in_dt", x).astype(jnp.float32)
+        + sub["dt_bias"][None])                            # [B, Hl]
+    bc = L.linear_rep(sub, "in_bc", x).astype(jnp.float32)
+    Bm, Cm = bc[..., :N], bc[..., N:]
+    A = -jnp.exp(sub["A_log"])
+    xh = xs.reshape(Bt, Hl, hd).astype(jnp.float32)
+    decay = jnp.exp(dt * A[None])                          # [B, Hl]
+    state = (cache["state"] * decay[..., None, None]
+             + jnp.einsum("bhd,bn,bh->bhdn", xh, Bm, dt))
+    y = jnp.einsum("bn,bhdn->bhd", Cm, state)
+    y = y + xh * sub["D"][None, :, None]
+    y = y.reshape(Bt, dinl).astype(x.dtype)
+    y = L.rmsnorm_sharded(sub["norm"], y * jax.nn.silu(z), ctx)
+    out = L.linear_row(sub, "out", y, ctx)
+    return out, {"state": state, "conv": new_conv}

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OptConfig, adamw_init, adamw_update, sgd_init, sgd_update,
+)

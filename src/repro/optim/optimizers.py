@@ -1,0 +1,63 @@
+"""Optimizers operating on flat f32 chunks (ZeRO-1 friendly).
+
+The trainer flattens every param leaf, pads to a multiple of the
+data-parallel world, and hands each rank its chunk; these update rules are
+shape-agnostic so they work on full leaves (smoke tests) and chunks (ZeRO-1)
+alike.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"      # adamw | sgd
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0   # global-norm clip (0 = off)
+
+
+def adamw_init(p: jnp.ndarray) -> dict:
+    return {
+        "m": jnp.zeros(p.shape, jnp.float32),
+        "v": jnp.zeros(p.shape, jnp.float32),
+    }
+
+
+def adamw_update(cfg: OptConfig, p, g, st, step):
+    g = g.astype(jnp.float32)
+    pf = p.astype(jnp.float32)
+    m = cfg.b1 * st["m"] + (1 - cfg.b1) * g
+    v = cfg.b2 * st["v"] + (1 - cfg.b2) * g * g
+    t = step.astype(jnp.float32) + 1.0
+    mh = m / (1 - cfg.b1 ** t)
+    vh = v / (1 - cfg.b2 ** t)
+    upd = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * pf
+    return (pf - cfg.lr * upd).astype(p.dtype), {"m": m, "v": v}
+
+
+def sgd_init(p: jnp.ndarray) -> dict:
+    return {"mom": jnp.zeros(p.shape, jnp.float32)}
+
+
+def sgd_update(cfg: OptConfig, p, g, st, step):
+    del step
+    mom = 0.9 * st["mom"] + g.astype(jnp.float32)
+    return (p.astype(jnp.float32) - cfg.lr * mom).astype(p.dtype), {"mom": mom}
+
+
+INITS = {"adamw": adamw_init, "sgd": sgd_init}
+UPDATES = {"adamw": adamw_update, "sgd": sgd_update}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))

@@ -1,0 +1,4 @@
+from repro.train.steps import TrainerConfig  # noqa: F401
+from repro.train.build import (  # noqa: F401
+    Program, build_program, attach_train, attach_serve,
+)

@@ -1,0 +1,341 @@
+"""Distributed train / serve steps (per-device SPMD programs + shard_map
+wrappers).
+
+Gradient flow inside one train step:
+  1. local grads via ``jax.value_and_grad`` of the per-device loss;
+  2. model-replicated leaves (norms, KV projections, router) are psum'd over
+     the ``model`` axis (their true gradient sums each rank's path);
+  3. ``GradSync`` synchronizes over ``data`` (+ ``pod``): Zen (or a baseline
+     scheme) for the row-sparse embedding table, psum for dense leaves —
+     this step IS the paper's subject;
+  4. ZeRO-1 update: each (pod, data) rank updates its flat chunk of every
+     leaf and the new params are all-gathered back.
+
+Serve steps (prefill / decode) use the sequence-sharded KV cache layout
+from ``repro.models`` (context-parallel decode over ``model``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.zen import GradSync, SyncConfig
+from repro.models.common import ArchConfig, ShardCtx
+from repro.models.model import Model
+from repro.optim.optimizers import INITS, UPDATES, OptConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    opt: OptConfig = OptConfig()
+    sync: SyncConfig = SyncConfig()
+    zero1: bool = True
+
+
+# ---------------------------------------------------------------------------
+# spec utilities
+# ---------------------------------------------------------------------------
+
+def _has_model(spec: P) -> bool:
+    return any(
+        s == "model" or (isinstance(s, tuple) and "model" in s)
+        for s in spec if s is not None
+    )
+
+
+def batch_pspecs(batch_shapes: dict, ctx: ShardCtx, n_batch_shards: int) -> dict:
+    """Shard dim0 over (pod, data) when divisible, else replicate."""
+    out = {}
+    for k, v in batch_shapes.items():
+        if v.shape and v.shape[0] % n_batch_shards == 0 and n_batch_shards > 1:
+            axes = tuple(a for a in ctx.batch_axes)
+            out[k] = P(axes if len(axes) > 1 else axes[0],
+                       *([None] * (len(v.shape) - 1)))
+        else:
+            out[k] = P(*([None] * len(v.shape)))
+    return out
+
+
+def zero_axes(ctx: ShardCtx):
+    return (("pod", "data") if ctx.pod_axis else ("data",))
+
+
+def _zero_world(ctx: ShardCtx) -> int:
+    return ctx.dp * (ctx.pods if ctx.pod_axis else 1)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 optimizer state
+# ---------------------------------------------------------------------------
+
+def opt_chunk_size(local_size: int, world: int) -> int:
+    return -(-local_size // world)
+
+
+def _shard_divisor(spec: P, ctx: ShardCtx) -> int:
+    div = 1
+    for ax in spec:
+        if ax is None:
+            continue
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            div *= {"model": ctx.tp, "data": ctx.dp,
+                    "pod": ctx.pods}.get(a, 1)
+    return div
+
+
+def init_opt_state(tcfg: TrainerConfig, params, ctx: ShardCtx, param_specs):
+    """Global optimizer state.  ZeRO-1: per-leaf moments shaped
+    [world, chunk] where chunk covers the LOCAL (per-device) param shard
+    (dim0 sharded over the zero axes)."""
+    world = _zero_world(ctx)
+    init = INITS[tcfg.opt.kind]
+
+    def leaf(p, spec):
+        if not tcfg.zero1:
+            return init(p)
+        local = p.size // _shard_divisor(spec, ctx)
+        c = opt_chunk_size(local, world)
+        return init(jnp.zeros((world, c), jnp.float32))
+
+    state = jax.tree.map(leaf, params, param_specs)
+    return {"leaves": state, "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_pspecs(tcfg: TrainerConfig, param_specs, ctx: ShardCtx):
+    zaxes = zero_axes(ctx)
+
+    def leaf(spec: P):
+        moment_spec = (P(zaxes, None) if tcfg.zero1 else spec)
+        return {k: moment_spec for k in INITS[tcfg.opt.kind](
+            jnp.zeros((1,), jnp.float32))}
+
+    leaves = jax.tree.map(leaf, param_specs,
+                          is_leaf=lambda x: isinstance(x, P))
+    return {"leaves": leaves, "step": P()}
+
+
+def abstract_opt_state(tcfg: TrainerConfig, param_shapes, ctx: ShardCtx,
+                       param_specs):
+    world = _zero_world(ctx)
+    names = list(INITS[tcfg.opt.kind](jnp.zeros((1,), jnp.float32)))
+
+    def leaf(p, spec):
+        if tcfg.zero1:
+            local = int(np.prod(p.shape)) // _shard_divisor(spec, ctx)
+            c = opt_chunk_size(local, world)
+            return {k: jax.ShapeDtypeStruct((world, c), jnp.float32)
+                    for k in names}
+        return {k: jax.ShapeDtypeStruct(p.shape, jnp.float32) for k in names}
+
+    return {"leaves": jax.tree.map(leaf, param_shapes, param_specs),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# the per-device train step
+# ---------------------------------------------------------------------------
+
+def local_param_shapes(param_shapes, param_specs, ctx: ShardCtx):
+    """Global ShapeDtypeStructs -> per-device (shard_map-local) shapes."""
+    def leaf(sds, spec):
+        shape = list(sds.shape)
+        for i, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axs = ax if isinstance(ax, tuple) else (ax,)
+            div = 1
+            for a in axs:
+                div *= {"model": ctx.tp, "data": ctx.dp,
+                        "pod": ctx.pods}.get(a, 1)
+            shape[i] = shape[i] // div
+        return jax.ShapeDtypeStruct(tuple(shape), sds.dtype)
+
+    return jax.tree.map(leaf, param_shapes, param_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_train_step(model: Model, tcfg: TrainerConfig, param_specs,
+                    param_shapes=None):
+    """Returns the per-device step fn (to be wrapped in shard_map)."""
+    ctx = model.ctx
+    world = _zero_world(ctx)
+    zaxes = zero_axes(ctx)
+    upd = UPDATES[tcfg.opt.kind]
+
+    spec_leaves = jax.tree.leaves(
+        param_specs, is_leaf=lambda x: isinstance(x, P))
+
+    # GradSync is precomputed OFFLINE (hash layouts etc.), from the local
+    # (per-device) grad shapes — grads match param shards inside shard_map.
+    if param_shapes is None:
+        param_shapes = model.abstract()[0]
+    grad_shapes = local_param_shapes(param_shapes, param_specs, ctx)
+    gradsync = GradSync(
+        tcfg.sync, list(model.sparse_paths), grad_shapes, ctx.dp,
+        data_axis=ctx.dp_axis, pod_axis=ctx.pod_axis)
+
+    def step_fn(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.train_loss, has_aux=True)(params, batch)
+
+        # --- 2. complete model-replicated grads over the model axis --------
+        if ctx.tp > 1:
+            flat_g, treedef = jax.tree.flatten(grads)
+            flat_g = [
+                g if _has_model(s) else lax.psum(g, ctx.tp_axis)
+                for g, s in zip(flat_g, spec_leaves)
+            ]
+            grads = jax.tree.unflatten(treedef, flat_g)
+
+        # --- 3. data(+pod)-axis sync: Zen / baselines -----------------------
+        grads, sync_stats = gradsync(grads)
+        metrics = {**metrics, **sync_stats}
+
+        # --- grad clip (global norm; sharded leaves psum over model) --------
+        if tcfg.opt.grad_clip > 0:
+            flat_g, _ = jax.tree.flatten(grads)
+            sq = jnp.float32(0)
+            for g, s in zip(flat_g, spec_leaves):
+                ss = jnp.sum(g.astype(jnp.float32) ** 2)
+                if ctx.tp > 1 and _has_model(s):
+                    ss = lax.psum(ss, ctx.tp_axis)
+                sq = sq + ss
+            gn = jnp.sqrt(sq)
+            scale = jnp.minimum(1.0, tcfg.opt.grad_clip / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+            metrics["grad_norm"] = gn
+
+        # --- 4. parameter update --------------------------------------------
+        step = opt_state["step"]
+        if tcfg.zero1:
+            r = lax.axis_index(zaxes) if (world > 1) else 0
+
+            def leaf_update(p, g, st):
+                c = opt_chunk_size(p.size, world)
+                gf = jnp.pad(g.reshape(-1).astype(jnp.float32),
+                             (0, world * c - p.size))
+                pf = jnp.pad(p.reshape(-1).astype(jnp.float32),
+                             (0, world * c - p.size))
+                g_my = lax.dynamic_slice(gf, (r * c,), (c,))
+                p_my = lax.dynamic_slice(pf, (r * c,), (c,))
+                # moments arrive as this rank's [1, c] shard of [world, c]
+                st_my = jax.tree.map(lambda m: m[0], st)
+                p_new, st_new = upd(tcfg.opt, p_my, g_my, st_my, step)
+                if world > 1:
+                    p_full = lax.all_gather(p_new, zaxes, tiled=True)
+                else:
+                    p_full = p_new
+                p_out = p_full[: p.size].reshape(p.shape).astype(p.dtype)
+                st_out = jax.tree.map(lambda m: m[None], st_new)
+                return p_out, st_out
+
+            new_params, new_s = _zip_update(params, grads,
+                                            opt_state["leaves"], leaf_update)
+            new_state = {"leaves": new_s, "step": step + 1}
+        else:
+            def leaf_update_full(p, g, st):
+                return upd(tcfg.opt, p, g, st, step)
+
+            new_params, new_state_leaves = _zip_update(
+                params, grads, opt_state["leaves"], leaf_update_full)
+            new_state = {"leaves": new_state_leaves, "step": step + 1}
+
+        # report metrics averaged over data
+        metrics = jax.tree.map(
+            lambda m: lax.pmean(jnp.asarray(m, jnp.float32), zaxes)
+            if world > 1 else jnp.asarray(m, jnp.float32), metrics)
+        return new_params, new_state, metrics
+
+    return step_fn
+
+
+def _zip_update(params, grads, states, fn):
+    """tree-map ``fn(p, g, st)`` where ``st`` is a sub-dict per param leaf."""
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(states)
+    outs = [fn(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    new_s = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    return new_p, new_s
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(model: Model):
+    def prefill_fn(params, batch):
+        logits_l, cache = model.prefill(params, batch)
+        return logits_l, cache
+    return prefill_fn
+
+
+def make_decode_step(model: Model, window: int = 0):
+    def decode_fn(params, cache, tokens):
+        nxt, logit_max, cache = model.decode(params, cache, tokens,
+                                             window=window)
+        return nxt, logit_max, cache
+    return decode_fn
+
+
+# ---------------------------------------------------------------------------
+# cache partition specs (mirror of Model.make_cache structure)
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(model: Model) -> Any:
+    cfg, ctx = model.cfg, model.ctx
+    b = ctx.batch_axes
+    batch = b if len(b) > 1 else b[0]
+
+    attn = {"k": P(batch, "model", None, None),
+            "v": P(batch, "model", None, None),
+            "pos": P("model")}
+    mla = {"c": P(batch, "model", None), "kr": P(batch, "model", None),
+           "pos": P("model")}
+    ssm = {"state": P(batch, "model", None, None),
+           "conv": P(batch, None, "model")}
+
+    def lift(tree, n_lead=1):
+        return jax.tree.map(lambda s: P(*([None] * n_lead), *s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    out: dict = {"t": P()}
+    if cfg.kind == "ssm":
+        out["layers"] = lift(ssm)
+    elif cfg.kind == "hybrid":
+        out["ssm"] = lift(ssm, 2)
+        if cfg.n_layers % cfg.shared_attn_every:
+            out["ssm_tail"] = lift(ssm)
+        out["attn"] = lift(attn)
+    elif cfg.mla_q_rank:
+        out["layers"] = lift(mla)
+    else:
+        out["layers"] = lift(attn)
+    if cfg.kind == "enc_dec":
+        out["cross"] = P(None, None, batch, None, None, None)
+    return out
+
+
+def globalize_cache(local_tree, pspec_tree, mesh: Mesh):
+    """Local-shard ShapeDtypeStructs -> global SDS given pspecs."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def leaf(sds, spec):
+        shape = list(sds.shape)
+        for i, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axs = ax if isinstance(ax, tuple) else (ax,)
+            mult = int(np.prod([sizes[a] for a in axs]))
+            shape[i] = shape[i] * mult
+        return jax.ShapeDtypeStruct(tuple(shape), sds.dtype)
+
+    return jax.tree.map(leaf, local_tree, pspec_tree)

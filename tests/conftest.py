@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
+# must see 1 device (the dry-run sets 512 itself, in its own process).
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,108 @@
+"""Sparse formats: roundtrips, wire sizes, Thm. 3 (hash bitmap)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+from repro.core.hashing import EMPTY, make_seeds
+
+
+def _dense(rng, m, density, d=None):
+    shape = (m,) if d is None else (m, d)
+    x = rng.standard_normal(shape).astype(np.float32)
+    mask = rng.uniform(size=m) < density
+    return jnp.asarray(x * (mask if d is None else mask[:, None]))
+
+
+@pytest.mark.parametrize("d", [None, 8])
+def test_coo_roundtrip(d):
+    rng = np.random.default_rng(0)
+    x = _dense(rng, 1000, 0.1, d)
+    coo = F.coo_encode(x, 256)
+    assert int(coo.overflow) == 0
+    y = F.coo_decode(coo, 1000)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=0)
+
+
+def test_coo_overflow_counted():
+    x = jnp.ones(100)
+    coo = F.coo_encode(x, 64)
+    assert int(coo.overflow) == 36
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(1, 4000), st.integers(0, 100))
+def test_bitmap_roundtrip(m, seed):
+    rng = np.random.default_rng(seed)
+    mask = jnp.asarray(rng.uniform(size=m) < 0.3)
+    words = F.bitmap_encode(mask)
+    assert words.shape[0] == -(-m // 32)
+    got = F.bitmap_decode(words, m)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(mask))
+
+
+@pytest.mark.parametrize("d", [None, 4])
+def test_blocks_roundtrip(d):
+    rng = np.random.default_rng(1)
+    x = _dense(rng, 1024, 0.05, d)
+    blk = F.blocks_encode(x, 16, 64)
+    assert int(blk.overflow) == 0
+    y = F.blocks_decode(blk, 1024)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=0)
+
+
+def test_hash_bitmap_roundtrip_and_thm3():
+    """Alg. 2 recovers exactly the global non-zero mask, and the TOTAL
+    bitmap size is |G|/32 words regardless of n (Thm. 3)."""
+    rng = np.random.default_rng(2)
+    m = 4096
+    seeds = make_seeds(0, 4)
+    x = _dense(rng, m, 0.07)
+    for n in (2, 8, 32):
+        layout = F.make_hash_bitmap_layout(m, n, np.asarray(seeds))
+        words = F.hash_bitmap_encode(x, layout)
+        # Thm. 3: total words = ceil(m/32), independent of n
+        assert words.shape[0] == -(-m // 32)
+        mask = F.hash_bitmap_decode(words, layout)
+        np.testing.assert_array_equal(np.asarray(mask),
+                                      np.asarray(x != 0))
+
+
+def test_hash_bitmap_per_server_slices():
+    """Each server's slice of the permuted bitmap decodes to exactly its
+    I_i members' occupancy (the per-server encode/decode of Alg. 2)."""
+    rng = np.random.default_rng(3)
+    m, n = 2048, 4
+    seeds = np.asarray(make_seeds(1, 4))
+    layout = F.make_hash_bitmap_layout(m, n, seeds)
+    x = _dense(rng, m, 0.1)
+    perm = np.asarray(layout.perm)
+    offs = np.asarray(layout.offsets)
+    permuted_mask = np.asarray(x != 0)[perm]
+    for i in range(n):
+        seg = permuted_mask[offs[i]: offs[i + 1]]
+        # encode segment independently (server-side view)
+        pad = (-len(seg)) % 32
+        words = F.bitmap_encode(jnp.asarray(np.pad(seg, (0, pad))))
+        dec = np.asarray(F.bitmap_decode(words, len(seg)))
+        np.testing.assert_array_equal(dec, seg)
+
+
+def test_wire_sizes_fig17_ordering():
+    """Fig. 17: at high density, hash bitmap < COO and < plain-bitmap-per-
+    server; at very low density COO wins."""
+    rng = np.random.default_rng(4)
+    m, n = 1 << 15, 16
+    for density, coo_should_win in [(0.005, True), (0.5, False)]:
+        x = _dense(rng, m, density)
+        nnz = int(np.count_nonzero(np.asarray(x)))
+        coo_bytes = nnz * 8
+        hash_bitmap_bytes = F.hash_bitmap_wire_bytes(m) + nnz * 4
+        naive_bitmap_bytes = n * F.bitmap_wire_bytes(m) // 1 + nnz * 4  # §3.2.1
+        assert hash_bitmap_bytes < naive_bitmap_bytes
+        if coo_should_win:
+            assert coo_bytes < hash_bitmap_bytes
+        else:
+            assert hash_bitmap_bytes < coo_bytes

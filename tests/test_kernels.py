@@ -1,0 +1,60 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashing import EMPTY, make_seeds
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("C", [64, 1024, 5000])
+@pytest.mark.parametrize("n,r1,k", [(16, 512, 3), (4, 128, 1), (256, 4096, 4)])
+def test_hash_stage_sweep(C, n, r1, k):
+    key = jax.random.PRNGKey(C + n)
+    seeds = np.asarray(make_seeds(0, k + 1))
+    idx = jax.random.randint(key, (C,), 0, 1 << 30, dtype=jnp.int32)
+    idx = jnp.where(jax.random.uniform(key, (C,)) < 0.9, idx, EMPTY)
+    p_k, q_k = ops.hash_stage_op(idx, seeds, n=n, r1=r1)
+    p_r, q_r = ref.hash_stage_ref(idx, jnp.asarray(seeds), n=n, r1=r1)
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(1, 10_000), st.floats(0.0, 1.0), st.integers(0, 99))
+def test_bitmap_pack_unpack_property(m, density, seed):
+    rng = np.random.default_rng(seed)
+    mask = jnp.asarray(rng.uniform(size=m) < density)
+    words = ops.bitmap_pack_op(mask)
+    pad = (-m) % 32
+    want = ref.bitmap_pack_ref(
+        jnp.pad(mask.astype(jnp.int32), (0, pad)))
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(want))
+    back = ops.bitmap_unpack_op(words, m)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(mask))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("C,M,d", [(128, 64, 8), (1000, 256, 128),
+                                   (256, 16, 1)])
+def test_scatter_add_sweep(C, M, d, dtype):
+    key = jax.random.PRNGKey(C * M)
+    idx = jax.random.randint(key, (C,), 0, M, dtype=jnp.int32)
+    idx = jnp.where(jax.random.uniform(key, (C,)) < 0.15, EMPTY, idx)
+    vals = jax.random.normal(key, (C, d), dtype=dtype)
+    out = jnp.zeros((M, d), dtype)
+    got = ops.coo_scatter_add_op(out, idx, vals)
+    want = ref.coo_scatter_add_ref(M, idx, vals)
+    tol = 1e-6 if dtype == jnp.float32 else 0.25
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_scatter_add_accumulates_duplicates():
+    idx = jnp.asarray([3, 3, 3, EMPTY], jnp.int32)
+    vals = jnp.ones((4, 4))
+    out = ops.coo_scatter_add_op(jnp.zeros((8, 4)), idx, vals)
+    np.testing.assert_allclose(np.asarray(out)[3], 3.0)
+    assert float(np.abs(np.asarray(out)).sum()) == pytest.approx(12.0)

@@ -1,0 +1,65 @@
+"""Pallas SSD kernel vs the pure-jnp chunked oracle and a naive recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd import ssd_fwd
+from repro.models.ssm import _ssd_chunked
+
+
+def _inputs(key, B, S, H, hd, N):
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a_log = jax.random.normal(ks[2], (H,)) * 0.3
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.4
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.4
+    return xh, dt, a_log, Bm, Cm
+
+
+@pytest.mark.parametrize("B,S,H,hd,N,chunk", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 128, 4, 32, 16, 64),
+    (1, 96, 1, 64, 32, 32),
+])
+def test_ssd_kernel_matches_jnp_oracle(B, S, H, hd, N, chunk):
+    xh, dt, a_log, Bm, Cm = _inputs(jax.random.PRNGKey(S + H), B, S, H, hd, N)
+    # oracle: jnp chunked scan (D=0 skip term)
+    y_ref, st_ref = _ssd_chunked(xh, dt, a_log, Bm, Cm,
+                                 jnp.zeros((H,)), chunk)
+    # kernel expects head-major with dt folded in and per-head dA/B/C
+    A = -jnp.exp(a_log)
+    dA = (dt * A[None, None, :]).transpose(0, 2, 1).reshape(B * H, S)
+    xdt = (xh * dt[..., None]).transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    Bh = jnp.broadcast_to(Bm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    Ch = jnp.broadcast_to(Cm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    y_k, st_k = ssd_fwd(xdt, dA, Bh, Ch, chunk=chunk)
+    y_k = y_k.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    st_k = st_k.reshape(B, H, hd, N)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_kernel_matches_naive_recurrence():
+    """Step-by-step recurrence oracle (independent of the chunked math)."""
+    B, S, H, hd, N = 1, 32, 1, 8, 4
+    xh, dt, a_log, Bm, Cm = _inputs(jax.random.PRNGKey(0), B, S, H, hd, N)
+    A = -jnp.exp(a_log)
+    state = jnp.zeros((hd, N))
+    ys = []
+    for t in range(S):
+        decay = jnp.exp(dt[0, t, 0] * A[0])
+        state = state * decay + jnp.outer(xh[0, t, 0] * dt[0, t, 0], Bm[0, t])
+        ys.append(state @ Cm[0, t])
+    y_naive = jnp.stack(ys)
+    dA = (dt * A[None, None, :]).transpose(0, 2, 1).reshape(H, S)
+    xdt = (xh * dt[..., None]).transpose(0, 2, 1, 3).reshape(H, S, hd)
+    y_k, st_k = ssd_fwd(xdt, dA, Bm.reshape(H, S, N), Cm.reshape(H, S, N),
+                        chunk=8)
+    np.testing.assert_allclose(np.asarray(y_k[0]), np.asarray(y_naive),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_k[0]), np.asarray(state),
+                               atol=1e-4, rtol=1e-4)
