@@ -1,0 +1,16 @@
+# Dev entry points. Everything runs on CPU (pallas kernels in interpret
+# mode); PYTHONPATH=src is the only environment the repo needs.
+
+PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
+
+.PHONY: test bench-smoke ci
+
+test:
+	$(PY) -m pytest -x -q
+
+# fast benchmark smoke: Table 1 + Fig. 7 analytics + the zen_sync
+# micro-benchmark that refreshes BENCH_sync.json
+bench-smoke:
+	$(PY) -m benchmarks.run --json BENCH_run.json tab1_stats fig7_schemes micro_sync
+
+ci: test bench-smoke

@@ -1,0 +1,157 @@
+"""Microbenchmark of the zen_sync hot path: per-stage encode/decode timings
+and end-to-end simulate() latency per scheme, across densities and backends.
+
+This seeds the repo's perf trajectory: results land in ``BENCH_sync.json``
+(repo root) so regressions in the sparsification fast path are visible
+PR-over-PR, not just claimed.  Timings are median-of-iters via
+``time.perf_counter`` with ``block_until_ready`` (benchmarks.common.time_fn).
+
+CSV lines also go to stdout for the benchmarks.run harness.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run micro_sync``
+or   ``PYTHONPATH=src python -m benchmarks.micro_sync [out.json]``
+"""
+from __future__ import annotations
+
+import functools
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import formats, metrics, schemes
+from repro.core.hashing import compact_indices, extract_partitions, hierarchical_hash
+
+M = 1 << 14          # scaled tensor (volumes scale linearly; see common.py)
+N = 4                # simulated workers
+DENSITIES = (0.01, 0.05, 0.2)
+BACKENDS = ("xla", "pallas")  # pallas runs in interpret mode off-TPU
+
+
+def _workers(m: int, density: float, seed: int = 0) -> jnp.ndarray:
+    key = jax.random.PRNGKey(seed)
+    masks = metrics.synth_sparse_masks(key, N, m, density)
+    return jax.random.normal(key, (N, m)) * masks
+
+
+def _record(results, name, us, **tags):
+    emit(f"micro_sync/{name}", us, ",".join(f"{k}={v}" for k, v in tags.items()))
+    results.append(dict(name=name, us=us, **tags))
+
+
+def bench_stages(results: list) -> None:
+    """Each fast-path stage in isolation, per backend."""
+    density = 0.05
+    g = _workers(M, density)[0]
+    layout = schemes.make_zen_layout(M, N, density_budget=4 * density)
+    lo = layout
+
+    sparsify = jax.jit(
+        lambda x: compact_indices(x != 0, lo.cap_index)[0])
+    idx = sparsify(g)
+    _record(results, "sparsify", time_fn(sparsify, g),
+            stage="sparsify", backend="xla", density=density)
+
+    for backend in BACKENDS:
+        if backend == "pallas":
+            hash_fn = functools.partial(
+                hierarchical_hash, n=N, r1=lo.r1, r2=lo.r2, k=lo.k,
+                backend="pallas", interpret=None,
+                static_seeds=lo.static_seeds())
+        else:
+            hash_fn = functools.partial(
+                hierarchical_hash, n=N, r1=lo.r1, r2=lo.r2, k=lo.k,
+                seeds=lo.device_tables().seeds)
+        part = hash_fn(idx)
+        _record(results, f"hash[{backend}]", time_fn(hash_fn, idx),
+                stage="hash", backend=backend, density=density)
+
+        ext = jax.jit(functools.partial(
+            extract_partitions, backend=backend, interpret=None))
+        _record(results, f"extract[{backend}]", time_fn(ext, part),
+                stage="extract", backend=backend, density=density)
+
+        mask = jnp.asarray(
+            np.random.default_rng(0).uniform(size=lo.cap_server)
+            < N * density)
+        pack = jax.jit(functools.partial(
+            formats.bitmap_encode, backend=backend, interpret=None))
+        words = pack(mask)
+        _record(results, f"bitmap_pack[{backend}]", time_fn(pack, mask),
+                stage="bitmap_pack", backend=backend, density=density)
+
+        wordsN = jnp.tile(words[None], (N, 1))
+        unpack = jax.jit(functools.partial(
+            formats.bitmap_decode_batch, length=lo.cap_server,
+            backend=backend, interpret=None))
+        _record(results, f"bitmap_unpack[{backend}]", time_fn(unpack, wordsN),
+                stage="bitmap_unpack", backend=backend, density=density)
+
+
+def bench_end_to_end(results: list) -> None:
+    """Full simulate() latency and wire volume per scheme and density."""
+    cases = []  # (name, fn, kwargs, scheme, density, backend)
+    for density in DENSITIES:
+        cap = max(64, int(M * 2 * density))
+        layout = schemes.make_zen_layout(
+            M, N, density_budget=min(0.5, 4 * density))
+        cases += [
+            (f"dense[d={density}]", schemes.dense_sync, {},
+             "dense", density, "xla"),
+            (f"agsparse[d={density}]", schemes.agsparse_sync,
+             dict(capacity=cap), "agsparse", density, "xla"),
+            (f"sparcml[d={density}]", schemes.sparcml_sync,
+             dict(n=N, capacity=cap), "sparcml", density, "xla"),
+            (f"sparse_ps[d={density}]", schemes.sparse_ps_sync,
+             dict(n=N, cap_push=cap, cap_pull=cap),
+             "sparse_ps", density, "xla"),
+            (f"omnireduce[d={density}]", schemes.omnireduce_sync,
+             dict(n=N, block=16, cap_push=max(8, cap // 8),
+                  cap_pull=max(8, cap // 8)),
+             "omnireduce", density, "xla"),
+        ] + [
+            (f"zen[{b},d={density}]", schemes.zen_sync,
+             dict(layout=layout, backend=b, interpret=None),
+             "zen", density, b)
+            for b in BACKENDS
+        ]
+    for name, fn, kwargs, scheme, density, backend in cases:
+        vals = _workers(M, density)
+        run = jax.jit(functools.partial(
+            schemes.simulate, fn, **kwargs))
+        out, stats = run(vals)
+        _record(
+            results, name, time_fn(run, vals),
+            stage="e2e", scheme=scheme, density=density, backend=backend,
+            sent_words=float(np.asarray(stats.sent_words).mean()),
+            overflow=int(np.asarray(stats.overflow).sum()),
+        )
+
+
+def main(out_path: str | None = None) -> None:
+    results: list[dict] = []
+    bench_stages(results)
+    bench_end_to_end(results)
+    payload = {
+        "bench": "micro_sync",
+        "meta": {
+            "M": M, "n_workers": N, "densities": list(DENSITIES),
+            "device": str(jax.devices()[0]),
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "note": "pallas timings are interpret-mode off-TPU: a "
+                    "correctness trajectory, not kernel speed",
+        },
+        "results": results,
+    }
+    out = pathlib.Path(out_path or "BENCH_sync.json")
+    out.write_text(json.dumps(payload, indent=1))
+    emit("micro_sync/written", 0.0, str(out))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else None)

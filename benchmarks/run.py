@@ -1,9 +1,14 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines (benchmarks.common.emit).
-Run: ``PYTHONPATH=src python -m benchmarks.run [module ...]``
+Run: ``PYTHONPATH=src python -m benchmarks.run [--json PATH] [module ...]``
+
+``--json PATH`` additionally writes a machine-readable report
+(per-module wall time and status) for the perf trajectory / CI.
 """
+import argparse
 import importlib
+import json
 import sys
 import time
 import traceback
@@ -21,25 +26,37 @@ MODULES = [
     "fig16_params",    # Fig. 16
     "fig17_bitmap",    # Fig. 17
     "fig18_breakdown",  # Fig. 18
+    "micro_sync",      # zen_sync per-stage + e2e perf trajectory
     "roofline",        # §Roofline (reads results/dryrun)
 ]
 
 
 def main() -> None:
-    only = sys.argv[1:]
+    ap = argparse.ArgumentParser(prog="benchmarks.run")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write a JSON report of module timings/status")
+    ap.add_argument("modules", nargs="*",
+                    help=f"subset to run (default: all of {MODULES})")
+    args = ap.parse_args()
+    report = []
     failures = []
     print("name,us_per_call,derived")
-    for name in (only or MODULES):
-        t0 = time.time()
+    for name in (args.modules or MODULES):
+        t0 = time.perf_counter()
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
             mod.main()
-            print(f"bench/{name},{(time.time()-t0)*1e6:.0f},ok", flush=True)
+            status = "ok"
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
-            print(f"bench/{name},{(time.time()-t0)*1e6:.0f},"
-                  f"FAILED {type(e).__name__}", flush=True)
+            status = f"FAILED {type(e).__name__}"
             failures.append(name)
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"bench/{name},{us:.0f},{status}", flush=True)
+        report.append({"module": name, "us": round(us, 1), "status": status})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "run", "modules": report}, f, indent=1)
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
 

@@ -15,6 +15,9 @@ from repro.core.hashing import (  # noqa: F401
     strawman_hash,
     make_seeds,
     compact_indices,
+    compact_rows,
+    partition_rank,
+    row_compact,
 )
 from repro.core.schemes import (  # noqa: F401
     ZenLayout,

@@ -26,7 +26,7 @@ from repro.core import metrics
 class SparsityProfile:
     """Everything the cost models need to know about a workload's sparsity."""
 
-    M: int                      # dense tensor size (words)
+    M: int                      # sparsity units (elements, or rows if vw > 1)
     d: Callable[[int], float]   # densification curve d(i), i >= 1
     s: Callable[[int], float]   # skewness curve s(n)
     block: int = 256            # OmniReduce block size
@@ -34,6 +34,11 @@ class SparsityProfile:
     # bottleneck partition's nonzero-block fraction (within that partition),
     # as a function of (i aggregated workers, n partitions)
     block_max: Callable[[int, int], float] | None = None
+    # value width: FP32 words per sparsity unit — 1 for element-sparse (the
+    # paper's setting), d for row-sparse embedding tables whose unit is an
+    # embedding row.  COO then costs (1 + vw) words per non-zero and dense /
+    # value-only terms scale by vw; every formula reduces to App. B at vw=1.
+    vw: int = 1
 
 
 def profile_from_masks(masks: np.ndarray, block: int = 256) -> SparsityProfile:
@@ -81,35 +86,39 @@ def profile_from_masks(masks: np.ndarray, block: int = 256) -> SparsityProfile:
 
 
 # --- volumes (FP32 words received per GPU) ---------------------------------
+# Each formula is App. B with the COO word count 2 generalized to (1 + vw)
+# and dense / value-only terms scaled by vw (see SparsityProfile.vw).
 
 def dense_allreduce(p: SparsityProfile, n: int) -> float:
     """Ring allreduce: reduce-scatter + all-gather."""
-    return 2 * (n - 1) / n * p.M
+    return 2 * (n - 1) / n * p.M * p.vw
 
 
 def agsparse(p: SparsityProfile, n: int) -> float:
     """AllGather of COO sparse tensors (one-shot, centralization)."""
-    return 2 * (n - 1) * p.d(1) * p.M
+    return (1 + p.vw) * (n - 1) * p.d(1) * p.M
 
 
 def sparcml(p: SparsityProfile, n: int) -> float:
     """SSAR_Recursive_double: log n stages of pairwise COO exchange with
     incremental aggregation; stage i exchanges density d(2^(i-1))."""
     stages = int(math.log2(n))
-    return sum(2 * p.d(2 ** (i - 1)) * p.M for i in range(1, stages + 1))
+    return sum((1 + p.vw) * p.d(2 ** (i - 1)) * p.M
+               for i in range(1, stages + 1))
 
 
 def sparse_ps(p: SparsityProfile, n: int) -> float:
     """Even-range partitioning PS: skew-penalized push and pull (App. B.1):
     2 (n-1) s^n (d_G + d_G^n) M / n."""
-    return 2 * (n - 1) * p.s(n) * (p.d(1) + p.d(n)) * p.M / n
+    return (1 + p.vw) * (n - 1) * p.s(n) * (p.d(1) + p.d(n)) * p.M / n
 
 
 def omnireduce(p: SparsityProfile, n: int) -> float:
     """Block-format PS. Non-zero blocks carry ``block`` values + 1 id word.
     The bottleneck aggregator receives the hottest partition's blocks from
     every worker (push) and broadcasts its aggregated blocks (pull)."""
-    w = (p.block + 1) / p.block  # wire words per gradient in a non-zero block
+    # wire words per gradient in a non-zero block
+    w = (p.block * p.vw + 1) / p.block
     if p.block_max is not None:
         push = (n - 1) * p.block_max(1, n) * w * p.M / n
         pull = (n - 1) * p.block_max(n, n) * w * p.M / n
@@ -123,21 +132,21 @@ def omnireduce(p: SparsityProfile, n: int) -> float:
 def balanced_parallelism(p: SparsityProfile, n: int) -> float:
     """Theorem 1.2's optimal scheme with COO (skew = 1 by construction):
     2 (n-1)(d_G + d_G^n) M / n."""
-    return 2 * (n - 1) * (p.d(1) + p.d(n)) * p.M / n
+    return (1 + p.vw) * (n - 1) * (p.d(1) + p.d(n)) * p.M / n
 
 
 def zen(p: SparsityProfile, n: int) -> float:
     """Balanced Parallelism + hash bitmap on Pull (§3.2.2):
     push COO (low density), pull values + M/32-word bitmap (Thm. 3)."""
-    push = 2 * (n - 1) * p.d(1) * p.M / n
-    pull = (n - 1) / n * (p.d(n) * p.M + p.M / 32)
+    push = (1 + p.vw) * (n - 1) * p.d(1) * p.M / n
+    pull = (n - 1) / n * (p.d(n) * p.M * p.vw + p.M / 32)
     return push + pull
 
 
 def lower_bound(p: SparsityProfile, n: int) -> float:
     """§4.1 footnote 3: receive the aggregated non-zeros of the other n-1
     workers, index-free: d_G^(n-1) M."""
-    return p.d(n - 1) * p.M if n > 1 else 0.0
+    return p.d(n - 1) * p.M * p.vw if n > 1 else 0.0
 
 
 SCHEMES: dict[str, Callable[[SparsityProfile, int], float]] = {
@@ -156,3 +165,28 @@ def normalized_times(p: SparsityProfile, n: int) -> dict[str, float]:
     """All schemes normalized to dense ring-allreduce (Fig. 7 y-axis)."""
     base = dense_allreduce(p, n)
     return {name: fn(p, n) / base for name, fn in SCHEMES.items()}
+
+
+# --- offline auto-scheme decision (runtime fallback, shared with Fig. 7) ----
+
+def worst_case_profile(M: int, density: float, vw: int = 1) -> SparsityProfile:
+    """Profile for a tensor whose per-step sparsity is only known by budget:
+    no-overlap densification d(i) = min(i·d_G, 1) (the adversarial case for
+    Zen's pull) and skew 1 (irrelevant to zen/dense)."""
+    return SparsityProfile(
+        M=M, d=lambda i: min(1.0, max(i, 1) * density), s=lambda n: 1.0, vw=vw)
+
+
+def zen_beats_dense(
+    rows: int, d: int, n: int, *, density_budget: float,
+    threshold: float = 1.0,
+) -> bool:
+    """The 'auto' scheme's per-leaf offline choice: sync a [rows, d] row-sparse
+    leaf with Zen iff its worst-case wire volume beats dense ring allreduce by
+    ``threshold``.  Built from the same ``zen`` / ``dense_allreduce`` formulas
+    as the Fig. 7 analytics so the runtime fallback cannot drift from them.
+    """
+    if n < 2:
+        return False  # single worker: nothing to sync, dense psum is free
+    p = worst_case_profile(rows, density_budget, vw=max(d, 1))
+    return zen(p, n) < threshold * dense_allreduce(p, n)

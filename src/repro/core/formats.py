@@ -71,8 +71,20 @@ def coo_decode(coo: COO, length: int) -> jnp.ndarray:
 # Plain bitmap (§3.2.1)
 # ---------------------------------------------------------------------------
 
-def bitmap_encode(mask: jnp.ndarray) -> jnp.ndarray:
-    """bool [M] -> uint32 [ceil(M/32)] packed bitmap."""
+def bitmap_encode(
+    mask: jnp.ndarray, *, backend: str = "xla",
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """bool [M] -> uint32 [ceil(M/32)] packed bitmap.
+
+    ``backend="pallas"`` routes through the fused pack kernel in
+    ``kernels/bitmap.py`` (bit-identical words: both pack LSB-first);
+    ``interpret=None`` auto-resolves (real kernels on TPU only).
+    """
+    if backend == "pallas":
+        from repro.kernels import ops  # deferred: kernels import this module
+
+        return ops.bitmap_pack_op(mask, interpret=interpret)
     m = mask.shape[0]
     pad = (-m) % BITS
     bits = jnp.pad(mask.astype(jnp.uint32), (0, pad)).reshape(-1, BITS)
@@ -80,11 +92,37 @@ def bitmap_encode(mask: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(bits * weights, axis=1, dtype=jnp.uint32)
 
 
-def bitmap_decode(words: jnp.ndarray, length: int) -> jnp.ndarray:
+def bitmap_decode(
+    words: jnp.ndarray, length: int, *, backend: str = "xla",
+    interpret: bool | None = None,
+) -> jnp.ndarray:
     """uint32 [W] -> bool [length]."""
+    if backend == "pallas":
+        from repro.kernels import ops  # deferred: kernels import this module
+
+        return ops.bitmap_unpack_op(words, length, interpret=interpret)
     weights = (jnp.uint32(1) << jnp.arange(BITS, dtype=jnp.uint32))
     bits = (words[:, None] & weights[None, :]) != 0
     return bits.reshape(-1)[:length]
+
+
+def bitmap_decode_batch(
+    words: jnp.ndarray, length: int, *, backend: str = "xla",
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """uint32 [n, W] -> bool [n, length]: all servers' bitmaps in one pass
+    (the fused Pull decode of zen_sync — one batched unpack instead of a
+    per-server closure)."""
+    n, W = words.shape
+    if backend == "pallas":
+        from repro.kernels import ops  # deferred: kernels import this module
+
+        bits = ops.bitmap_unpack_op(
+            words.reshape(-1), n * W * BITS, interpret=interpret)
+        return bits.reshape(n, W * BITS)[:, :length]
+    weights = (jnp.uint32(1) << jnp.arange(BITS, dtype=jnp.uint32))
+    bits = (words[:, :, None] & weights[None, None, :]) != 0
+    return bits.reshape(n, -1)[:, :length]
 
 
 def bitmap_wire_bytes(length: int) -> int:

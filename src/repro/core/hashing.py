@@ -104,7 +104,26 @@ def partition_of(indices: jnp.ndarray, n: int, seeds: jnp.ndarray) -> jnp.ndarra
     return hash_mod(indices, seeds[0], n)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "r1", "r2", "k"))
+def partition_rank(p: jnp.ndarray, surv: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Rank of each surviving entry among survivors of the same partition,
+    in slot order — the ``atomicAdd`` counter of Alg. 1's serial region.
+
+    Sort-free: a segmented cumulative sum over a [C, n] partition one-hot
+    (O(C·n) fully-parallel integer adds; n is the mesh size, so small) instead
+    of the previous stable ``argsort`` + ``searchsorted`` (O(C log C) and a
+    ``sort`` op in the HLO).  Dead entries get rank -1.
+    """
+    onehot = (p[:, None] == jnp.arange(n, dtype=p.dtype)[None, :]) & surv[:, None]
+    seg = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1        # [C, n]
+    safe_p = jnp.clip(p, 0, n - 1).astype(jnp.int32)
+    rank = jnp.take_along_axis(seg, safe_p[:, None], axis=1)[:, 0]
+    return jnp.where(surv, rank, -1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "r1", "r2", "k", "backend", "interpret", "static_seeds"),
+)
 def hierarchical_hash(
     indices: jnp.ndarray,
     *,
@@ -112,7 +131,10 @@ def hierarchical_hash(
     r1: int,
     r2: int,
     k: int,
-    seeds: jnp.ndarray,
+    seeds: jnp.ndarray | None = None,
+    backend: str = "xla",
+    interpret: bool | None = None,
+    static_seeds: tuple | None = None,
 ) -> HashPartition:
     """Algorithm 1, TPU-adapted (see module docstring).
 
@@ -125,24 +147,51 @@ def hierarchical_hash(
       k: number of second-level hash functions (paper: 3).
       seeds: uint32 [k + 1]; ``seeds[0]`` is ``h0``, ``seeds[1:]`` are
           ``h1..hk``.
+      backend: "xla" computes the hash rounds with jnp; "pallas" fuses all
+          k+1 hash evaluations into one VMEM pass (kernels/hash_stage.py) and
+          requires ``static_seeds``.
+      interpret: run Pallas kernels in interpret mode; None (default) means
+          auto — real kernels on TPU, interpret elsewhere.
+      static_seeds: the same k+1 seeds as compile-time python ints — required
+          by the pallas backend (seeds are drawn once per job, so baking them
+          into the kernel matches the paper's broadcast-at-startup).
 
     Returns:
       HashPartition with the filled index memory.
     """
+    if backend not in ("xla", "pallas"):
+        raise ValueError(f"backend must be 'xla' or 'pallas', got {backend!r}")
+    if seeds is None and static_seeds is not None:
+        seeds = jnp.asarray(static_seeds, dtype=jnp.uint32)
+    if seeds is None:
+        raise ValueError("hierarchical_hash needs `seeds` (or `static_seeds`)")
     if seeds.shape[0] < k + 1:
         raise ValueError(f"need {k + 1} seeds, got {seeds.shape[0]}")
     row = r1 + r2
     valid = indices != EMPTY
-    p = partition_of(indices, n, seeds)  # int32 [C]
+
+    # --- hash stage: p = h0 mod n, q_i = h_i mod r1 for all k rounds --------
+    if backend == "pallas":
+        if static_seeds is None:
+            raise ValueError(
+                "backend='pallas' needs `static_seeds` (a tuple of k+1 python "
+                "ints); pass tuple(int(s) for s in layout.seeds)")
+        from repro.kernels import ops  # deferred: kernels import this module
+
+        p, q = ops.hash_stage_op(
+            indices, static_seeds[: k + 1], n=n, r1=r1, interpret=interpret)
+        qs = [q[i] for i in range(k)]
+    else:
+        p = partition_of(indices, n, seeds)  # int32 [C]
+        qs = [hash_mod(indices, seeds[i], r1) for i in range(1, k + 1)]
 
     memory = jnp.full((n * row,), EMPTY, dtype=jnp.int32)
     pending = valid
     rounds = []
 
     # --- k parallel rounds -------------------------------------------------
-    for i in range(1, k + 1):
-        q = hash_mod(indices, seeds[i], r1)
-        slot = p * row + q
+    for i in range(k):
+        slot = jnp.clip(p, 0, n - 1) * row + jnp.clip(qs[i], 0, r1 - 1)
         # propose: only pending indices, only into currently-empty slots
         occupied = memory[slot] != EMPTY
         propose = pending & ~occupied
@@ -155,19 +204,11 @@ def hierarchical_hash(
         rounds.append(jnp.sum(won.astype(jnp.int32)))
         pending = pending & ~won
 
-    # --- serial memory: prefix-sum slot assignment (≙ atomicAdd) -----------
-    # rank of each survivor among survivors of the same partition
+    # --- serial memory: segmented-cumsum slot assignment (≙ atomicAdd) ------
     surv = pending
-    psurv = jnp.where(surv, p, n)  # dead entries sort to the end
-    order = jnp.argsort(psurv, stable=True)
-    p_sorted = psurv[order]
-    # position within its partition run
-    idx_in_run = jnp.arange(indices.shape[0]) - jnp.searchsorted(
-        p_sorted, p_sorted, side="left"
-    )
-    rank = jnp.full_like(indices, -1).at[order].set(idx_in_run)
+    rank = partition_rank(p, surv, n)
     fits = surv & (rank < r2)
-    slot = p * row + r1 + jnp.clip(rank, 0, r2 - 1)
+    slot = jnp.clip(p, 0, n - 1) * row + r1 + jnp.clip(rank, 0, r2 - 1)
     memory = memory.at[jnp.where(fits, slot, n * row)].set(
         jnp.where(fits, indices, EMPTY), mode="drop"
     )
@@ -181,18 +222,35 @@ def hierarchical_hash(
     )
 
 
-def extract_partitions(part: HashPartition) -> jnp.ndarray:
+def row_compact(mem: jnp.ndarray) -> jnp.ndarray:
+    """Sort-free row compaction: live entries to the front of each row in
+    slot order, EMPTY-padded tail.  Cumsum + scatter — no ``sort`` op."""
+    valid = mem != EMPTY
+    pos = jnp.cumsum(valid.astype(jnp.int32), axis=1) - 1
+    rows = jnp.arange(mem.shape[0])[:, None]
+    tgt = jnp.where(valid, pos, mem.shape[1])
+    out = jnp.full_like(mem, EMPTY)
+    return out.at[rows, tgt].set(jnp.where(valid, mem, EMPTY), mode="drop")
+
+
+def extract_partitions(
+    part: HashPartition, *, backend: str = "xla",
+    interpret: bool | None = None,
+) -> jnp.ndarray:
     """Line 19–23 of Alg. 1: per-partition index extraction.
 
     Returns int32 [n, r1+r2] with each partition's live indices compacted to
-    the front (EMPTY-padded) — the ``nonzero()`` step, made static-shape by
-    compaction instead of a dynamic-size result.  Cheap because the memory is
-    already only ~2x the nnz (the paper's "negligible extraction overhead").
+    the front (EMPTY-padded, slot order preserved) — the ``nonzero()`` step,
+    made static-shape by compaction instead of a dynamic-size result.  Cheap
+    because the memory is already only ~2x the nnz (the paper's "negligible
+    extraction overhead").  Sort-free on both backends: segmented cumsum
+    compaction in jnp, or the Pallas kernel in ``kernels/compact.py``.
     """
-    mem = part.memory
-    # stable argsort moves EMPTY (int32 max) to the back of each row
-    order = jnp.argsort(mem, axis=1, stable=True)
-    return jnp.take_along_axis(mem, order, axis=1)
+    if backend == "pallas":
+        from repro.kernels import ops  # deferred: kernels import this module
+
+        return ops.row_compact_op(part.memory, interpret=interpret)
+    return row_compact(part.memory)
 
 
 # ---------------------------------------------------------------------------
@@ -237,5 +295,22 @@ def compact_indices(mask: jnp.ndarray, capacity: int) -> tuple[jnp.ndarray, jnp.
     tgt = jnp.where(mask & (pos < capacity), pos, capacity)
     out = jnp.full((capacity,), EMPTY, dtype=jnp.int32)
     out = out.at[tgt].set(jnp.where(mask, src, EMPTY), mode="drop")
+    overflow = jnp.maximum(nnz - capacity, 0)
+    return out, overflow
+
+
+def compact_rows(mask: jnp.ndarray, capacity: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched ``compact_indices``: bool [n, M] -> (int32 [n, capacity]
+    EMPTY-padded ascending positions per row, int32 [n] overflow).  One
+    batched cumsum + scatter instead of a vmapped per-row closure."""
+    m = mask.astype(jnp.int32)
+    pos = jnp.cumsum(m, axis=1) - 1
+    nnz = jnp.sum(m, axis=1)
+    src = jnp.broadcast_to(
+        jnp.arange(mask.shape[1], dtype=jnp.int32), mask.shape)
+    tgt = jnp.where(mask & (pos < capacity), pos, capacity)
+    rows = jnp.arange(mask.shape[0])[:, None]
+    out = jnp.full((mask.shape[0], capacity), EMPTY, dtype=jnp.int32)
+    out = out.at[rows, tgt].set(jnp.where(mask, src, EMPTY), mode="drop")
     overflow = jnp.maximum(nnz - capacity, 0)
     return out, overflow

@@ -41,6 +41,7 @@ from repro.core.formats import COO, Blocks
 from repro.core.hashing import (
     EMPTY,
     compact_indices,
+    compact_rows,
     extract_partitions,
     hash_mod,
     hierarchical_hash,
@@ -53,6 +54,13 @@ class SyncStats(NamedTuple):
 
     sent_words: jnp.ndarray  # f32 scalar
     overflow: jnp.ndarray    # i32 scalar (total dropped non-zeros)
+
+
+def _axis_size(axis: str) -> int:
+    """Size of a named axis, on jax versions with or without lax.axis_size."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis)
+    return lax.psum(1, axis)
 
 
 def _nnz(idx: jnp.ndarray) -> jnp.ndarray:
@@ -69,9 +77,10 @@ def _mask(dense: jnp.ndarray) -> jnp.ndarray:
 
 
 def _gather_rows(dense: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather dense[idx] with EMPTY -> 0; idx may have any leading shape."""
     safe = jnp.where(idx == EMPTY, 0, idx)
     vals = dense[safe]
-    dead = (idx == EMPTY) if dense.ndim == 1 else (idx == EMPTY)[:, None]
+    dead = (idx == EMPTY) if dense.ndim == 1 else (idx == EMPTY)[..., None]
     return jnp.where(dead, 0, vals)
 
 
@@ -88,7 +97,7 @@ def _scatter_add(
 
 def dense_sync(dense: jnp.ndarray, *, axis: str) -> tuple[jnp.ndarray, SyncStats]:
     """Ring allreduce (Horovod's AllReduce in the paper's evaluation)."""
-    n = lax.axis_size(axis)
+    n = _axis_size(axis)
     out = lax.psum(dense, axis)
     words = jnp.float32(2 * (n - 1) / n) * dense.size
     return out, SyncStats(sent_words=words, overflow=jnp.int32(0))
@@ -108,7 +117,7 @@ def agsparse_sync(
     out = jnp.zeros_like(dense)
     out = _scatter_add(out, all_idx.reshape(-1),
                        all_val.reshape(-1, *dense.shape[1:]))
-    n = lax.axis_size(axis)
+    n = _axis_size(axis)
     sent = (n - 1) * _nnz(coo.indices) * (1 + _vwidth(dense))
     return out, SyncStats(sent_words=sent, overflow=coo.overflow)
 
@@ -126,7 +135,11 @@ def sparcml_sync(
     worst case each stage (densification makes it sub-double in practice), so
     stage capacity is ``min(capacity * 2^s, M)``.
     """
-    assert n & (n - 1) == 0, "SparCML recursive doubling needs a power of two"
+    if n <= 0 or n & (n - 1) != 0:
+        raise ValueError(
+            f"sparcml_sync: recursive doubling needs a power-of-two worker "
+            f"count, got n={n}. Pad the data-parallel axis to the next power "
+            f"of two, or pick scheme='zen', which accepts any n.")
     acc = dense
     sent = jnp.float32(0)
     overflow = jnp.int32(0)
@@ -157,7 +170,13 @@ def sparse_ps_sync(
     provisioning needs ``cap_push ≈ skew × nnz / n`` — the imbalance cost.
     """
     M = dense.shape[0]
-    assert M % n == 0
+    if M % n != 0:
+        raise ValueError(
+            f"sparse_ps_sync: even-range partitioning needs the tensor length "
+            f"to divide by the worker count, got M={M}, n={n} "
+            f"(M % n = {M % n}). Pad the tensor to "
+            f"{(M + n - 1) // n * n} rows or use scheme='zen', whose hash "
+            f"partitioning has no divisibility requirement.")
     shard = M // n
     vw = _vwidth(dense)
     # --- Push: split into n contiguous ranges, COO-encode each --------------
@@ -196,7 +215,13 @@ def omnireduce_sync(
     """As Sparse PS but transmitting non-zero *blocks* (no per-element index).
     """
     M = dense.shape[0]
-    assert M % n == 0 and (M // n) % block == 0
+    if M % n != 0 or (M // n) % block != 0:
+        raise ValueError(
+            f"omnireduce_sync: needs M divisible by n*block so every worker's "
+            f"contiguous range is a whole number of blocks, got M={M}, n={n}, "
+            f"block={block}. Pad the tensor to "
+            f"{(M + n * block - 1) // (n * block) * (n * block)} rows, shrink "
+            f"`block`, or use scheme='zen' (no divisibility requirement).")
     shard = M // n
     parts = dense.reshape(n, shard, *dense.shape[1:])
     blk = jax.vmap(lambda d: formats.blocks_encode(d, block, cap_push))(parts)
@@ -230,6 +255,15 @@ def omnireduce_sync(
 # Zen: Balanced Parallelism via hierarchical hashing + hash bitmap
 # ---------------------------------------------------------------------------
 
+class _DeviceTables(NamedTuple):
+    """ZenLayout's lookup tables as device-resident arrays (uploaded once)."""
+
+    seeds: jnp.ndarray       # uint32 [k+1]
+    perm: jnp.ndarray        # int32 [M]
+    local_pos: jnp.ndarray   # int32 [M]
+    offsets: jnp.ndarray     # int32 [n+1]
+
+
 @dataclasses.dataclass(frozen=True)
 class ZenLayout:
     """Offline-precomputed, worker-shared state for one tensor shape.
@@ -254,6 +288,29 @@ class ZenLayout:
     @property
     def cap_bitmap_words(self) -> int:
         return (self.cap_server + 31) // 32
+
+    def device_tables(self) -> _DeviceTables:
+        """The numpy tables as device arrays, uploaded on first use and cached
+        on the layout — repeated traces of ``zen_sync`` reuse the same buffers
+        instead of re-staging ~2M ints of constants per trace."""
+        tabs = self.__dict__.get("_device_tables")
+        if tabs is None:
+            # the first call may happen inside a jit trace: force eager
+            # upload so concrete arrays (not tracers) are cached
+            with jax.ensure_compile_time_eval():
+                tabs = _DeviceTables(
+                    seeds=jnp.asarray(self.seeds, dtype=jnp.uint32),
+                    perm=jnp.asarray(self.perm, dtype=jnp.int32),
+                    local_pos=jnp.asarray(self.local_pos, dtype=jnp.int32),
+                    offsets=jnp.asarray(self.offsets, dtype=jnp.int32),
+                )
+            object.__setattr__(self, "_device_tables", tabs)
+        return tabs
+
+    def static_seeds(self) -> tuple:
+        """Seeds as compile-time python ints (the pallas hash kernel bakes
+        them in, mirroring the paper's broadcast-at-startup)."""
+        return tuple(int(s) for s in np.asarray(self.seeds))
 
 
 def make_zen_layout(
@@ -291,9 +348,28 @@ def make_zen_layout(
     )
 
 
+def _backend_scatter_add(
+    out: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray,
+    *, backend: str, interpret: bool,
+) -> jnp.ndarray:
+    """out [M(, d)] += vals [C(, d)] at row idx [C]; EMPTY / out-of-range
+    dropped.  Pallas backend routes through the sequential-grid RMW kernel
+    (kernels/scatter_add.py); value vectors are widened to 2-D for it."""
+    if backend != "pallas":
+        return _scatter_add(out, idx, vals)
+    from repro.kernels import ops as kops  # deferred: kernels import core
+
+    squeeze = out.ndim == 1
+    out2 = out[:, None] if squeeze else out
+    vals2 = vals[:, None] if squeeze else vals
+    res = kops.coo_scatter_add_op(out2, idx, vals2, interpret=interpret)
+    return res[:, 0] if squeeze else res
+
+
 def zen_sync(
     dense: jnp.ndarray, *, axis: str, layout: ZenLayout,
-    use_hash_bitmap: bool = True,
+    use_hash_bitmap: bool = True, backend: str = "xla",
+    interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, SyncStats]:
     """Zen synchronization: Alg. 1 push + Alg. 2 (hash bitmap) pull.
 
@@ -306,59 +382,78 @@ def zen_sync(
     4. Pull: all_gather of (hash bitmap, non-zero values) — constant-size
        index metadata by Thm. 3.  With ``use_hash_bitmap=False``, pull uses
        COO (the Fig. 18 ablation).
+
+    ``backend`` selects the compute route for the encode/decode stages:
+    "xla" is pure jnp; "pallas" fuses the hash stage, bitmap pack/unpack,
+    row compaction, and scatter-add through ``repro.kernels.ops`` (interpret
+    mode off-TPU, real kernels on TPU).  Both routes are sort-free and
+    value-identical.
     """
     lo = layout
     n = lo.n
     vw = _vwidth(dense)
-    seeds = jnp.asarray(lo.seeds)
+    if backend not in ("xla", "pallas"):
+        raise ValueError(f"backend must be 'xla' or 'pallas', got {backend!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    tabs = lo.device_tables()
 
     # --- 1. local sparsification + hierarchical hash -------------------------
     idx, ov_c = compact_indices(_mask(dense), lo.cap_index)
-    part = hierarchical_hash(idx, n=n, r1=lo.r1, r2=lo.r2, k=lo.k, seeds=seeds)
-    pidx = extract_partitions(part)              # [n, r1+r2] compacted
-    pval = jax.vmap(lambda ii: _gather_rows(dense, ii))(pidx)
+    if backend == "pallas":
+        part = hierarchical_hash(
+            idx, n=n, r1=lo.r1, r2=lo.r2, k=lo.k, backend="pallas",
+            interpret=interpret, static_seeds=lo.static_seeds())
+    else:
+        part = hierarchical_hash(
+            idx, n=n, r1=lo.r1, r2=lo.r2, k=lo.k, seeds=tabs.seeds)
+    pidx = extract_partitions(part, backend=backend, interpret=interpret)
+    pval = _gather_rows(dense, pidx)             # [n, r1+r2(, d)]
 
     # --- 2. Push (balanced all_to_all) ---------------------------------------
     got_idx = lax.all_to_all(pidx, axis, split_axis=0, concat_axis=0)
     got_val = lax.all_to_all(pval, axis, split_axis=0, concat_axis=0)
 
     # --- 3. server-side aggregation into the compact partition buffer --------
-    local_pos = jnp.asarray(lo.local_pos)
     flat_idx = got_idx.reshape(-1)
     lp = jnp.where(flat_idx == EMPTY, lo.cap_server,
-                   local_pos[jnp.where(flat_idx == EMPTY, 0, flat_idx)])
+                   tabs.local_pos[jnp.where(flat_idx == EMPTY, 0, flat_idx)])
     buf = jnp.zeros((lo.cap_server, *dense.shape[1:]), dense.dtype)
-    buf = buf.at[lp].add(got_val.reshape(-1, *dense.shape[1:]), mode="drop")
+    buf = _backend_scatter_add(
+        buf, lp, got_val.reshape(-1, *dense.shape[1:]),
+        backend=backend, interpret=interpret)
 
     # --- 4. Pull --------------------------------------------------------------
     srv_mask = _mask(buf)
     cap_pull = lo.r1 + lo.r2  # aggregated nnz per server <= sum of pushes
     lpos, ov_p = compact_indices(srv_mask, cap_pull)
     vals = _gather_rows(buf, lpos)
-    perm = jnp.asarray(lo.perm)
-    offsets = jnp.asarray(lo.offsets)
 
     if use_hash_bitmap:
-        bm = formats.bitmap_encode(srv_mask)               # [cap_bitmap_words]
-        all_bm = lax.all_gather(bm, axis)                   # [n, W]
-        all_val = lax.all_gather(vals, axis)                # [n, cap_pull(,d)]
-        # decode: per server p, set-bit local positions -> global indices
-        def decode(p, words):
-            m = formats.bitmap_decode(words, lo.cap_server)
-            lpos_p, _ = compact_indices(m, cap_pull)
-            g = jnp.where(lpos_p == EMPTY, EMPTY,
-                          perm[jnp.clip(offsets[p] + lpos_p, 0, lo.length - 1)])
-            return g
-        glob = jax.vmap(decode)(jnp.arange(n, dtype=jnp.int32), all_bm)
+        bm = formats.bitmap_encode(srv_mask, backend=backend,
+                                   interpret=interpret)  # [cap_bitmap_words]
+        all_bm = lax.all_gather(bm, axis)                 # [n, W]
+        all_val = lax.all_gather(vals, axis)              # [n, cap_pull(,d)]
+        # fused decode: one batched unpack + compaction + permutation gather
+        # (replaces the per-server vmapped closure)
+        m_all = formats.bitmap_decode_batch(
+            all_bm, lo.cap_server, backend=backend, interpret=interpret)
+        lpos_all, _ = compact_rows(m_all, cap_pull)       # [n, cap_pull]
+        gidx = jnp.clip(tabs.offsets[:n, None] + lpos_all, 0, lo.length - 1)
+        glob = jnp.where(lpos_all == EMPTY, EMPTY, tabs.perm[gidx])
         pull_words = (n - 1) * (_nnz(lpos) * vw + lo.cap_bitmap_words)
     else:  # COO pull (ablation)
-        glob_l = jnp.where(lpos == EMPTY, EMPTY,
-                           perm[jnp.clip(offsets[lax.axis_index(axis)] + lpos,
-                                         0, lo.length - 1)])
+        glob_l = jnp.where(
+            lpos == EMPTY, EMPTY,
+            tabs.perm[jnp.clip(tabs.offsets[lax.axis_index(axis)] + lpos,
+                               0, lo.length - 1)])
         glob = lax.all_gather(glob_l, axis)
         all_val = lax.all_gather(vals, axis)
         pull_words = (n - 1) * _nnz(lpos) * (vw + 1)
 
+    # final decode-apply stays in XLA on both backends: its output is the
+    # full-length gradient, too large for the VMEM-resident scatter kernel
+    # (which is sized for the compact server buffer).
     out = jnp.zeros_like(dense)
     out = _scatter_add(out, glob.reshape(-1),
                        all_val.reshape(-1, *dense.shape[1:]))

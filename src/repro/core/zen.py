@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import schemes
+from repro.core import costmodel, schemes
 from repro.core.schemes import SyncStats, ZenLayout, make_zen_layout
 
 
@@ -40,7 +40,12 @@ class SyncConfig:
     # push + bitmap pull volume under the density budget beats dense ring
     # allreduce; otherwise that leaf falls back to dense.  This prevents
     # Zen from LOSING on high-density tensors (paper Fig. 17's crossover).
+    # The volume comparison lives in costmodel.zen_beats_dense, shared with
+    # the Fig. 7 analytics.
     auto_threshold: float = 1.0   # zen_volume < threshold * dense_volume
+    # Compute route for Zen's encode/decode stages: "xla" (pure jnp) or
+    # "pallas" (fused kernels via repro.kernels.ops; interpret mode off-TPU).
+    backend: str = "xla"
 
 
 def _leaf_path_str(path) -> str:
@@ -87,15 +92,12 @@ class GradSync:
             rows = leaf.shape[0] if len(leaf.shape) >= 1 else 1
             d = leaf.shape[1] if len(leaf.shape) > 1 else 1
             if cfg.scheme == "auto":
-                # offline volume comparison (words, per worker):
-                # zen: push COO 2*budget*rows*(1+d) / n + pull values+bitmap
-                n = max(n_data, 2)
-                cap = cfg.density_budget * rows
-                zen_words = (2 * (n - 1) / n * cap * (1 + d)
-                             + (n - 1) / n * (min(n * cap, rows) * d
-                                              + rows / 32))
-                dense_words = 2 * (n - 1) / n * rows * d
-                if zen_words >= cfg.auto_threshold * dense_words:
+                # offline worst-case volume comparison — the same zen/dense
+                # formulas as the Fig. 7 analytics (costmodel.SCHEMES)
+                if not costmodel.zen_beats_dense(
+                        rows, d, max(n_data, 2),
+                        density_budget=cfg.density_budget,
+                        threshold=cfg.auto_threshold):
                     self._auto_dense.add(name)
                     continue
             if cfg.scheme in ("zen", "auto"):
@@ -122,7 +124,7 @@ class GradSync:
         elif cfg.scheme in ("zen", "auto"):
             out, st = schemes.zen_sync(
                 g, axis=ax, layout=self._layouts[name],
-                use_hash_bitmap=cfg.use_hash_bitmap)
+                use_hash_bitmap=cfg.use_hash_bitmap, backend=cfg.backend)
         elif cfg.scheme == "agsparse":
             out, st = schemes.agsparse_sync(g, axis=ax, capacity=cap)
         elif cfg.scheme == "sparcml":

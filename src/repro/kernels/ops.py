@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core.hashing import EMPTY
 from repro.kernels import bitmap as _bm
+from repro.kernels import compact as _cp
 from repro.kernels import hash_stage as _hs
 from repro.kernels import scatter_add as _sa
 
@@ -21,9 +22,20 @@ LANES = _hs.LANES
 BITS = _bm.BITS
 
 
+def default_interpret() -> bool:
+    """Pallas interpret mode default: real kernels on TPU, interpret (jax-op
+    emulation, a correctness vehicle) everywhere else."""
+    return jax.default_backend() != "tpu"
+
+
+def _resolve(interpret):
+    return default_interpret() if interpret is None else interpret
+
+
 def hash_stage_op(indices: jnp.ndarray, seeds, n: int, r1: int,
-                  *, interpret: bool = True):
+                  *, interpret: bool | None = None):
     """indices int32 [C] -> (p [C], q [k, C]) via the Pallas kernel."""
+    interpret = _resolve(interpret)
     seeds = tuple(int(s) for s in seeds)
     C = indices.shape[0]
     pad = (-C) % (LANES * _hs.BLOCK_ROWS)
@@ -33,8 +45,9 @@ def hash_stage_op(indices: jnp.ndarray, seeds, n: int, r1: int,
     return p.reshape(-1)[:C], q.reshape(len(seeds) - 1, -1)[:, :C]
 
 
-def bitmap_pack_op(mask: jnp.ndarray, *, interpret: bool = True):
+def bitmap_pack_op(mask: jnp.ndarray, *, interpret: bool | None = None):
     """bool/int [M] -> uint32 [ceil(M/32)] packed words."""
+    interpret = _resolve(interpret)
     M = mask.shape[0]
     W = -(-M // BITS)
     padW = (-W) % _bm.BLOCK_W
@@ -44,8 +57,9 @@ def bitmap_pack_op(mask: jnp.ndarray, *, interpret: bool = True):
 
 
 def bitmap_unpack_op(words: jnp.ndarray, length: int, *,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """uint32 [W] -> bool [length]."""
+    interpret = _resolve(interpret)
     W = words.shape[0]
     padW = (-W) % _bm.BLOCK_W
     wp = jnp.pad(words, (0, padW))
@@ -53,9 +67,20 @@ def bitmap_unpack_op(words: jnp.ndarray, length: int, *,
     return bits.reshape(-1)[:length].astype(bool)
 
 
+def row_compact_op(mem: jnp.ndarray, *, interpret: bool | None = None):
+    """int32 [R, L] -> [R, L] live entries compacted to the front (slot order
+    preserved), EMPTY-padded tail."""
+    interpret = _resolve(interpret)
+    R, L = mem.shape
+    pad = (-L) % _cp.BLOCK_J
+    memp = jnp.pad(mem, ((0, 0), (0, pad)), constant_values=EMPTY)
+    return _cp.row_compact(memp, interpret=interpret)[:, :L]
+
+
 def coo_scatter_add_op(out: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray,
-                       *, interpret: bool = True):
+                       *, interpret: bool | None = None):
     """out [M, d] += vals [C, d] at row idx [C] (EMPTY dropped)."""
+    interpret = _resolve(interpret)
     C = idx.shape[0]
     pad = (-C) % _sa.BLOCK_C
     idxp = jnp.pad(idx, (0, pad), constant_values=EMPTY)

@@ -49,3 +49,19 @@ def coo_scatter_add_ref(out_rows: int, idx: jnp.ndarray,
     out = jnp.zeros((out_rows, vals.shape[-1]), vals.dtype)
     tgt = jnp.where((idx == EMPTY) | (idx >= out_rows), out_rows, idx)
     return out.at[tgt].add(vals, mode="drop")
+
+
+# Oracle for kernels/compact.py: the jnp cumsum+scatter compaction IS the
+# XLA-backend implementation, so alias it rather than duplicating the
+# formulation (a copy could never catch a bug in it).
+from repro.core.hashing import row_compact as row_compact_ref  # noqa: E402,F401
+
+
+def row_compact_argsort_ref(mem: jnp.ndarray) -> jnp.ndarray:
+    """The pre-fast-path compaction (stable per-row argsort).  EMPTY is int32
+    max, so sorting moves it to the back — but it also sorts the live values
+    ascending, which the order-preserving compaction deliberately does not.
+    Kept as the randomized-equivalence oracle: per row, ``sort(compact(x))``
+    must equal ``argsort_compact(x)``."""
+    order = jnp.argsort(mem, axis=1, stable=True)
+    return jnp.take_along_axis(mem, order, axis=1)

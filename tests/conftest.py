@@ -5,6 +5,11 @@ import pytest
 # must see 1 device (the dry-run sets 512 itself, in its own process).
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-minute integration tests (subprocess meshes)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
