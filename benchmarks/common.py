@@ -7,7 +7,6 @@ SCALE-fraction of each tensor with the same density/skew (documented in the
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Callable
 
@@ -34,8 +33,15 @@ def paper_masks(model: str, n_workers: int, seed: int = 0,
     return metrics.synth_sparse_masks(key, n_workers, elems, d)
 
 
-def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
-    """Median wall time per call in microseconds (blocks on jax results)."""
+def time_fn(fn: Callable, *args, iters: int = 7, warmup: int = 2,
+            reduce: Callable = np.min) -> float:
+    """Wall time per call in microseconds (blocks on jax results).
+
+    ``reduce`` defaults to the minimum: the least-contended observation of
+    a deterministic computation, and the estimator least distorted by
+    noisy neighbors on shared hosts (same reasoning as ``timeit``) — which
+    is what the CI bench gate needs to compare runs across machines and
+    load conditions."""
     for _ in range(warmup):
         r = fn(*args)
         jax.block_until_ready(r)
@@ -45,8 +51,77 @@ def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
         r = fn(*args)
         jax.block_until_ready(r)
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts) * 1e6)
+    return float(reduce(ts) * 1e6)
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# synthetic trainer-shaped gradient pytree (bucketed-schedule benchmarks)
+# ---------------------------------------------------------------------------
+
+def synthetic_grad_tree(
+    n_workers: int, *, n_dense: int = 512, dense_size: int = 64,
+    rows: int = 1024, d: int = 8, density: float = 0.05, seed: int = 0,
+):
+    """A model-shaped gradient pytree: one row-sparse embedding table plus
+    ``n_dense`` small dense leaves (biases, norms, router weights — the
+    long tail that dominates a transformer's *leaf count* while its FLOPs
+    live elsewhere).  This is the regime gradient bucketing was invented
+    for: per-leaf sync pays a fixed dispatch/collective cost per tiny
+    tensor, fused buckets pay it once per ``bucket_bytes``.
+
+    Returns (abstract shapes for GradSync, per-worker grads [n, ...])."""
+    key = jax.random.PRNGKey(seed)
+    kt, km, kd = jax.random.split(key, 3)
+    shapes = {
+        "embed": {"table": jax.ShapeDtypeStruct((rows, d), jnp.float32)},
+        "layers": {
+            f"w{i:02d}": jax.ShapeDtypeStruct((dense_size,), jnp.float32)
+            for i in range(n_dense)
+        },
+    }
+    mask = metrics.synth_sparse_masks(km, n_workers, rows, density)
+    grads = {
+        "embed": {"table":
+                  jax.random.normal(kt, (n_workers, rows, d))
+                  * mask[..., None]},
+        "layers": {
+            f"w{i:02d}": jax.random.normal(
+                jax.random.fold_in(kd, i), (n_workers, dense_size))
+            for i in range(n_dense)
+        },
+    }
+    return shapes, grads
+
+
+def build_gradsync_run(sync_cfg, shapes, grads, n_workers: int):
+    """Jit one vmapped GradSync step; returns (run fn, stats, plan)."""
+    from repro.core.zen import GradSync
+
+    gs = GradSync(sync_cfg, ["embed/table"], shapes, n_workers,
+                  data_axis="data")
+    run = jax.jit(lambda g: jax.vmap(gs, axis_name="data")(g))
+    _, stats = jax.block_until_ready(run(grads))
+    return run, stats, gs.plan
+
+
+def time_ab(fns: dict, *args, rounds: int = 30, warmup: int = 3) -> dict:
+    """Interleaved A/B timing on a noisy shared host.
+
+    Alternates single calls of each candidate within every round so all
+    arms sample the same drift window, then reports the per-arm median
+    over rounds.  Because the samples are paired, medians stay comparable
+    even when the host load shifts mid-run.  Returns ``{name: us}``."""
+    for fn in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+    samples: dict = {name: [] for name in fns}
+    for _ in range(rounds):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            samples[name].append(time.perf_counter() - t0)
+    return {name: float(np.median(ts)) * 1e6 for name, ts in samples.items()}

@@ -7,7 +7,6 @@ CPU has no real 25/100Gbps network, so throughput combines:
 for the paper's two testbeds (25Gbps TCP, 100Gbps RDMA).  Speedups over
 AllReduce are scale-free.
 """
-import time
 
 import jax
 import jax.numpy as jnp

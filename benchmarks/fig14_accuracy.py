@@ -9,9 +9,8 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit
 from repro.configs import get_config
 from repro.core.zen import SyncConfig
 from repro.data.pipeline import DataConfig, SyntheticLM

@@ -20,8 +20,9 @@ def main() -> None:
         pull_ps = agg.reshape(n, -1).sum(1)
         # Zen: h0 hash partitions
         layout = make_zen_layout(elems, n, density_budget=0.1)
-        p_of = lambda idx: np.asarray(
-            hash_mod(jnp.asarray(idx, jnp.int32), layout.seeds[0], n))
+        def p_of(idx):
+            return np.asarray(
+                hash_mod(jnp.asarray(idx, jnp.int32), layout.seeds[0], n))
         push_zen = np.stack([
             np.bincount(p_of(np.nonzero(mi)[0]), minlength=n) for mi in m])
         pull_zen = np.bincount(p_of(np.nonzero(agg)[0]), minlength=n)

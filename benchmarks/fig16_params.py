@@ -2,7 +2,6 @@
 rehash count k (wall time of the jitted hierarchical hash on this host;
 relative shape is what the paper reports)."""
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, paper_masks, time_fn
 from repro.core import hashing as H

@@ -1,7 +1,5 @@
 """Fig. 17: wire size of sparse formats vs aggregated tensor density
 (normalized to the dense tensor; 16 servers)."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
@@ -13,7 +11,6 @@ def main() -> None:
     m = 1 << 18
     n = 16
     seeds = np.asarray(make_seeds(0, 4))
-    layout = F.make_hash_bitmap_layout(m, n, seeds)
     rng = np.random.default_rng(0)
     dense_bytes = m * 4
     for density in (0.01, 0.05, 0.2, 0.5, 0.8, 0.95):

@@ -1,5 +1,4 @@
 """Fig. 2: skewness ratio of non-zero gradient locations vs partitions."""
-import numpy as np
 
 from benchmarks.common import PAPER_MODELS, emit, paper_masks
 from repro.core import metrics

@@ -1,7 +1,6 @@
 """Fig. 8: the strawman's memory-size dilemma — larger memory cuts hash
 collisions (information loss) but raises extraction cost."""
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, paper_masks, time_fn
 from repro.core import hashing as H

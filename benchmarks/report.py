@@ -5,8 +5,6 @@ results/dryrun/*.json.  Run after the dry-run:
 """
 from __future__ import annotations
 
-import json
-from pathlib import Path
 
 from benchmarks.roofline import RESULTS, load_all
 

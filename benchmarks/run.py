@@ -5,6 +5,10 @@ Run: ``PYTHONPATH=src python -m benchmarks.run [--json PATH] [module ...]``
 
 ``--json PATH`` additionally writes a machine-readable report
 (per-module wall time and status) for the perf trajectory / CI.
+
+Exit code: non-zero iff any sub-benchmark failed — including one that
+calls ``sys.exit`` internally — so the CI bench gate can trust it.  The
+JSON report is written even when modules fail.
 """
 import argparse
 import importlib
@@ -15,7 +19,7 @@ import traceback
 
 MODULES = [
     "tab1_stats",      # Table 1
-    "fig1_overlap",    # Fig. 1 (a/b)
+    "fig1_overlap",    # Fig. 1 (a/b/c)
     "fig2_skewness",   # Fig. 2
     "fig7_schemes",    # Fig. 7
     "fig8_strawman",   # Fig. 8
@@ -26,9 +30,28 @@ MODULES = [
     "fig16_params",    # Fig. 16
     "fig17_bitmap",    # Fig. 17
     "fig18_breakdown",  # Fig. 18
-    "micro_sync",      # zen_sync per-stage + e2e perf trajectory
+    "micro_sync",      # zen_sync per-stage + e2e + bucketed perf trajectory
     "roofline",        # §Roofline (reads results/dryrun)
 ]
+
+
+def _run_module(name: str) -> str:
+    """Import + run one benchmark; returns 'ok' or 'FAILED <reason>'.
+
+    ``SystemExit`` is treated like any other failure (recorded, the loop
+    continues, the harness still exits non-zero) instead of aborting the
+    remaining modules mid-run with whatever code the module chose."""
+    try:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        mod.main()
+        return "ok"
+    except SystemExit as e:
+        if not e.code:  # sys.exit(0)/sys.exit(None): a successful exit
+            return "ok"
+        return f"FAILED SystemExit({e.code})"
+    except Exception as e:  # noqa: BLE001
+        traceback.print_exc()
+        return f"FAILED {type(e).__name__}"
 
 
 def main() -> None:
@@ -43,22 +66,19 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in (args.modules or MODULES):
         t0 = time.perf_counter()
-        try:
-            mod = importlib.import_module(f"benchmarks.{name}")
-            mod.main()
-            status = "ok"
-        except Exception as e:  # noqa: BLE001
-            traceback.print_exc()
-            status = f"FAILED {type(e).__name__}"
+        status = _run_module(name)
+        if status != "ok":
             failures.append(name)
         us = (time.perf_counter() - t0) * 1e6
         print(f"bench/{name},{us:.0f},{status}", flush=True)
         report.append({"module": name, "us": round(us, 1), "status": status})
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"bench": "run", "modules": report}, f, indent=1)
+            json.dump({"bench": "run", "modules": report,
+                       "failures": failures}, f, indent=1)
     if failures:
-        raise SystemExit(f"benchmark failures: {failures}")
+        print(f"benchmark failures: {failures}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,5 +1,4 @@
 """Table 1: model workloads and their gradient sparsity statistics."""
-import numpy as np
 
 from benchmarks.common import PAPER_MODELS, SCALE_ELEMS, emit, paper_masks
 from repro.core import metrics

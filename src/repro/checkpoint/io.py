@@ -7,7 +7,6 @@ are stored via a uint16 view (npz has no bf16).
 from __future__ import annotations
 
 import json
-import os
 from pathlib import Path
 
 import jax

@@ -1,0 +1,225 @@
+"""Gradient-pytree bucketing for overlap-scheduled synchronization.
+
+DESIGN.md §7.  A ``BucketPlan`` partitions the flattened gradient pytree
+into fixed-byte **buckets**, the unit at which the trainer emits sync ops
+(`repro.train.schedule`):
+
+* **Dense leaves** are flattened and fused: consecutive leaves of the same
+  dtype are packed into one bucket while the bucket stays under
+  ``bucket_bytes`` (a single leaf larger than the budget becomes its own
+  oversized bucket — leaves are never split, so reassembly is a static
+  slice/reshape).  One fused ``psum`` per bucket replaces one ``psum`` per
+  leaf; because ``psum`` is elementwise, fusion is bit-exact.
+* **Row-sparse leaves** (Zen's subject) are *never* fused or split: each is
+  its own bucket.  The Zen layout (hash partitions, server offsets,
+  bitmap width) is a pure function of the whole tensor's row count —
+  splitting a table across buckets would need per-fragment layouts and
+  would break the balanced-partition guarantee of Thm. 2 (DESIGN.md §7).
+* ``bucket_bytes=None`` is the **monolithic fallback**: one bucket per
+  leaf, no fusion — op-for-op the pre-bucketing gradient path, so every
+  scheme stays bit-compatible with the PR-1 trainer.
+
+The plan is built offline from abstract shapes (like ``ZenLayout``); the
+traced work per step is only ``gather_bucket`` / ``scatter_bucket``
+(concat + slice/reshape) around each bucket's sync op.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schemes import SyncStats
+
+DENSE = "dense_fused"
+SPARSE = "sparse"
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """One gradient leaf's home inside a bucket payload."""
+
+    name: str            # '/'-joined tree path (GradSync naming)
+    index: int           # position in jax.tree flatten order
+    shape: tuple         # original leaf shape
+    dtype: Any
+    offset: int          # element offset inside the fused flat payload
+    size: int            # element count
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """A unit of synchronization: one collective chain per bucket."""
+
+    bid: int
+    kind: str                     # DENSE | SPARSE
+    scheme: str                   # resolved sync scheme for this bucket
+    slots: tuple[LeafSlot, ...]   # exactly 1 slot when kind == SPARSE
+    nbytes: int
+
+    @property
+    def size(self) -> int:
+        return sum(s.size for s in self.slots)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Offline partition of a gradient pytree into sync buckets."""
+
+    buckets: tuple[Bucket, ...]
+    n_leaves: int
+    bucket_bytes: int | None
+
+    @property
+    def schemes(self) -> tuple[str, ...]:
+        return tuple(b.scheme for b in self.buckets)
+
+    def validate(self) -> None:
+        """Every leaf in exactly one bucket; sparse buckets are singletons;
+        fused dense buckets respect the byte budget (oversized leaves may
+        stand alone)."""
+        seen: set[int] = set()
+        for b in self.buckets:
+            for s in b.slots:
+                if s.index in seen:
+                    raise ValueError(f"leaf {s.name} assigned twice")
+                seen.add(s.index)
+            if b.kind == SPARSE and len(b.slots) != 1:
+                raise ValueError(f"sparse bucket {b.bid} fuses leaves")
+            if (self.bucket_bytes is not None and b.kind == DENSE
+                    and len(b.slots) > 1 and b.nbytes > self.bucket_bytes):
+                raise ValueError(
+                    f"fused bucket {b.bid} exceeds bucket_bytes")
+        if len(seen) != self.n_leaves:
+            raise ValueError(
+                f"plan covers {len(seen)} of {self.n_leaves} leaves")
+
+
+def leaf_path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+    )
+
+
+def _leaf_nbytes(leaf) -> int:
+    return int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+
+
+def make_bucket_plan(
+    grad_shapes: Any,
+    is_sparse: Callable[[str], bool],
+    bucket_bytes: int | None,
+    sparse_scheme: Callable[[str, Any], str],
+    dense_scheme: str = "dense",
+) -> BucketPlan:
+    """Build the plan from abstract grad shapes (offline, untraced).
+
+    ``sparse_scheme(name, leaf)`` resolves the per-tensor scheme for a
+    row-sparse leaf (the 'auto' cost-model decision lives in the caller);
+    dense buckets always use ``dense_scheme``.
+    """
+    if bucket_bytes is not None and bucket_bytes <= 0:
+        raise ValueError(f"bucket_bytes must be positive, got {bucket_bytes}")
+    leaves = jax.tree_util.tree_flatten_with_path(grad_shapes)[0]
+    buckets: list[Bucket] = []
+    pend: list[LeafSlot] = []   # dense leaves awaiting fusion
+    pend_bytes = 0
+
+    def flush():
+        nonlocal pend, pend_bytes
+        if pend:
+            buckets.append(Bucket(
+                bid=len(buckets), kind=DENSE, scheme=dense_scheme,
+                slots=tuple(pend), nbytes=pend_bytes))
+            pend, pend_bytes = [], 0
+
+    for i, (path, leaf) in enumerate(leaves):
+        name = leaf_path_str(path)
+        size = int(leaf.size)
+        nbytes = _leaf_nbytes(leaf)
+        if is_sparse(name):
+            flush()
+            buckets.append(Bucket(
+                bid=len(buckets), kind=SPARSE,
+                scheme=sparse_scheme(name, leaf),
+                slots=(LeafSlot(name, i, tuple(leaf.shape), leaf.dtype,
+                                0, size),),
+                nbytes=nbytes))
+            continue
+        fits = (bucket_bytes is not None and pend
+                and pend[0].dtype == leaf.dtype
+                and pend_bytes + nbytes <= bucket_bytes)
+        if not fits:
+            flush()
+        pend.append(LeafSlot(
+            name, i, tuple(leaf.shape), leaf.dtype,
+            offset=sum(s.size for s in pend), size=size))
+        pend_bytes += nbytes
+        if bucket_bytes is None or pend_bytes >= bucket_bytes:
+            flush()
+    flush()
+    plan = BucketPlan(buckets=tuple(buckets), n_leaves=len(leaves),
+                      bucket_bytes=bucket_bytes)
+    plan.validate()
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# payload assembly / disassembly (the only traced code in this module)
+# ---------------------------------------------------------------------------
+
+def gather_bucket(bucket: Bucket, flat_leaves: list) -> jnp.ndarray:
+    """Assemble a bucket's payload from the flat leaf list.
+
+    Sparse buckets pass their single leaf through unchanged (the scheme
+    needs the [rows, d] structure); dense buckets are a flat concat."""
+    if bucket.kind == SPARSE:
+        return flat_leaves[bucket.slots[0].index]
+    parts = [flat_leaves[s.index].reshape(-1) for s in bucket.slots]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
+def scatter_bucket(bucket: Bucket, payload: jnp.ndarray, out: list) -> None:
+    """Write a synced payload back into the flat leaf list ``out``."""
+    if bucket.kind == SPARSE:
+        out[bucket.slots[0].index] = payload
+        return
+    for s in bucket.slots:
+        out[s.index] = payload[s.offset:s.offset + s.size].reshape(s.shape)
+
+
+# ---------------------------------------------------------------------------
+# SyncStats reduction across buckets
+# ---------------------------------------------------------------------------
+
+def reduce_stats(
+    plan: BucketPlan, per_bucket: list[SyncStats]
+) -> dict[str, jnp.ndarray]:
+    """Reduce per-bucket SyncStats into the trainer's metric dict.
+
+    Keeps the monolithic path's keys (sparse_sent_words / overflow /
+    dense_words) so dashboards and the multi-device tests are unchanged,
+    and adds per-scheme bucket tags — static plan facts reported as
+    constants so they survive the pmean over data."""
+    sent = jnp.float32(0.0)
+    dense_words = jnp.float32(0.0)
+    overflow = jnp.int32(0)
+    tags: dict[str, int] = {}
+    for b, st in zip(plan.buckets, per_bucket):
+        overflow = overflow + st.overflow
+        if b.kind == SPARSE:
+            sent = sent + st.sent_words
+        else:
+            dense_words = dense_words + st.sent_words
+        tags[b.scheme] = tags.get(b.scheme, 0) + 1
+    stats = {
+        "sync/sparse_sent_words": sent,
+        "sync/overflow": overflow,
+        "sync/dense_words": dense_words,
+        "sync/n_buckets": jnp.float32(len(plan.buckets)),
+    }
+    for scheme, count in sorted(tags.items()):
+        stats[f"sync/buckets[{scheme}]"] = jnp.float32(count)
+    return stats

@@ -177,6 +177,19 @@ def worst_case_profile(M: int, density: float, vw: int = 1) -> SparsityProfile:
         M=M, d=lambda i: min(1.0, max(i, 1) * density), s=lambda n: 1.0, vw=vw)
 
 
+def choose_scheme(
+    p: SparsityProfile, n: int, *, threshold: float = 1.0
+) -> str:
+    """Per-tensor scheme choice from a (measured or worst-case) profile:
+    'zen' iff its wire volume beats dense ring allreduce by ``threshold``.
+    This is the decision the bucket planner applies tensor-by-tensor —
+    scheme='auto' is per-leaf, never global (a high-density table falls
+    back to dense without dragging genuinely sparse tables with it)."""
+    if n < 2:
+        return "dense"  # single worker: nothing to sync, dense psum is free
+    return "zen" if zen(p, n) < threshold * dense_allreduce(p, n) else "dense"
+
+
 def zen_beats_dense(
     rows: int, d: int, n: int, *, density_budget: float,
     threshold: float = 1.0,
@@ -186,7 +199,5 @@ def zen_beats_dense(
     ``threshold``.  Built from the same ``zen`` / ``dense_allreduce`` formulas
     as the Fig. 7 analytics so the runtime fallback cannot drift from them.
     """
-    if n < 2:
-        return False  # single worker: nothing to sync, dense psum is free
     p = worst_case_profile(rows, density_budget, vw=max(d, 1))
-    return zen(p, n) < threshold * dense_allreduce(p, n)
+    return choose_scheme(p, n, threshold=threshold) == "zen"

@@ -20,7 +20,7 @@ Everything is static-shape and jit-friendly: index sets are fixed-capacity
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Sequence
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

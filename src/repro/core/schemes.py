@@ -37,7 +37,6 @@ import numpy as np
 from jax import lax
 
 from repro.core import formats
-from repro.core.formats import COO, Blocks
 from repro.core.hashing import (
     EMPTY,
     compact_indices,
@@ -366,39 +365,34 @@ def _backend_scatter_add(
     return res[:, 0] if squeeze else res
 
 
-def zen_sync(
-    dense: jnp.ndarray, *, axis: str, layout: ZenLayout,
-    use_hash_bitmap: bool = True, backend: str = "xla",
-    interpret: bool | None = None,
-) -> tuple[jnp.ndarray, SyncStats]:
-    """Zen synchronization: Alg. 1 push + Alg. 2 (hash bitmap) pull.
+class ZenEncoded(NamedTuple):
+    """Output of ``zen_encode`` — everything the push collective needs."""
 
-    1. Compact local non-zero indices; hierarchically hash into n balanced
-       partitions (h0 fixes the server; h1..hk + serial memory place them).
-    2. Push: all_to_all of (indices, values) — balanced by Thm. 2.
-    3. Aggregate: each server scatter-adds into its compact partition buffer
-       (positions = offline local_pos, so same index from all workers lands
-       in the same slot — complete aggregation).
-    4. Pull: all_gather of (hash bitmap, non-zero values) — constant-size
-       index metadata by Thm. 3.  With ``use_hash_bitmap=False``, pull uses
-       COO (the Fig. 18 ablation).
+    pidx: jnp.ndarray      # int32 [n, r1+r2] partitioned indices
+    pval: jnp.ndarray      # [n, r1+r2(, d)] gathered values
+    overflow: jnp.ndarray  # i32: worker compaction + serial-memory overflow
 
-    ``backend`` selects the compute route for the encode/decode stages:
-    "xla" is pure jnp; "pallas" fuses the hash stage, bitmap pack/unpack,
-    row compaction, and scatter-add through ``repro.kernels.ops`` (interpret
-    mode off-TPU, real kernels on TPU).  Both routes are sort-free and
-    value-identical.
-    """
-    lo = layout
-    n = lo.n
-    vw = _vwidth(dense)
+
+def _resolve_backend(backend: str, interpret: bool | None) -> bool:
     if backend not in ("xla", "pallas"):
         raise ValueError(f"backend must be 'xla' or 'pallas', got {backend!r}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    tabs = lo.device_tables()
+    return interpret
 
-    # --- 1. local sparsification + hierarchical hash -------------------------
+
+def zen_encode(
+    dense: jnp.ndarray, *, layout: ZenLayout, backend: str = "xla",
+    interpret: bool | None = None,
+) -> ZenEncoded:
+    """Zen stage 1: local sparsify + hierarchical hash + partition extract.
+
+    Collective-free — this is the compute the bucketed schedule overlaps
+    with the previous bucket's wire time (repro.train.schedule)."""
+    lo = layout
+    n = lo.n
+    interpret = _resolve_backend(backend, interpret)
+    tabs = lo.device_tables()
     idx, ov_c = compact_indices(_mask(dense), lo.cap_index)
     if backend == "pallas":
         part = hierarchical_hash(
@@ -409,6 +403,24 @@ def zen_sync(
             idx, n=n, r1=lo.r1, r2=lo.r2, k=lo.k, seeds=tabs.seeds)
     pidx = extract_partitions(part, backend=backend, interpret=interpret)
     pval = _gather_rows(dense, pidx)             # [n, r1+r2(, d)]
+    return ZenEncoded(pidx=pidx, pval=pval, overflow=ov_c + part.overflow)
+
+
+def zen_commit(
+    enc: ZenEncoded, dense: jnp.ndarray, *, axis: str, layout: ZenLayout,
+    use_hash_bitmap: bool = True, backend: str = "xla",
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, SyncStats]:
+    """Zen stages 2-4: push all_to_all, server aggregation, bitmap pull.
+
+    ``dense`` supplies only the output shape/dtype (no data dependency —
+    every transmitted value already lives in ``enc``)."""
+    lo = layout
+    n = lo.n
+    vw = _vwidth(dense)
+    interpret = _resolve_backend(backend, interpret)
+    tabs = lo.device_tables()
+    pidx, pval = enc.pidx, enc.pval
 
     # --- 2. Push (balanced all_to_all) ---------------------------------------
     got_idx = lax.all_to_all(pidx, axis, split_axis=0, concat_axis=0)
@@ -462,9 +474,43 @@ def zen_sync(
     push_sent = (jnp.sum(jax.vmap(_nnz)(pidx)) - _nnz(pidx[my_rank])) * (1 + vw)
     stats = SyncStats(
         sent_words=push_sent + pull_words,
-        overflow=ov_c + part.overflow + ov_p,
+        overflow=enc.overflow + ov_p,
     )
     return out, stats
+
+
+def zen_sync(
+    dense: jnp.ndarray, *, axis: str, layout: ZenLayout,
+    use_hash_bitmap: bool = True, backend: str = "xla",
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, SyncStats]:
+    """Zen synchronization: Alg. 1 push + Alg. 2 (hash bitmap) pull.
+
+    1. Compact local non-zero indices; hierarchically hash into n balanced
+       partitions (h0 fixes the server; h1..hk + serial memory place them).
+    2. Push: all_to_all of (indices, values) — balanced by Thm. 2.
+    3. Aggregate: each server scatter-adds into its compact partition buffer
+       (positions = offline local_pos, so same index from all workers lands
+       in the same slot — complete aggregation).
+    4. Pull: all_gather of (hash bitmap, non-zero values) — constant-size
+       index metadata by Thm. 3.  With ``use_hash_bitmap=False``, pull uses
+       COO (the Fig. 18 ablation).
+
+    ``backend`` selects the compute route for the encode/decode stages:
+    "xla" is pure jnp; "pallas" fuses the hash stage, bitmap pack/unpack,
+    row compaction, and scatter-add through ``repro.kernels.ops`` (interpret
+    mode off-TPU, real kernels on TPU).  Both routes are sort-free and
+    value-identical.
+
+    Implemented as ``zen_encode`` (stage 1, collective-free) followed by
+    ``zen_commit`` (stages 2-4) — the split the bucketed overlap schedule
+    pipelines (DESIGN.md §7).
+    """
+    enc = zen_encode(dense, layout=layout, backend=backend,
+                     interpret=interpret)
+    return zen_commit(enc, dense, axis=axis, layout=layout,
+                      use_hash_bitmap=use_hash_bitmap, backend=backend,
+                      interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

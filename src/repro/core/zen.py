@@ -8,19 +8,29 @@ selectable sparse scheme over the data axis; everything else is a plain
 intra-pod sparse sync (paper §4.1 does the same with NVLink-intra /
 network-inter).
 
+Since the bucketed-scheduler refactor (DESIGN.md §7) the pytree is first
+partitioned into fixed-byte buckets (``repro.core.buckets``): dense leaves
+fuse into flat psum buckets, row-sparse leaves stay whole, and the per-bucket
+sync ops are emitted double-buffered (``repro.train.schedule``) so XLA can
+overlap bucket *i*'s collective with bucket *i+1*'s encode.
+``bucket_bytes=None`` keeps the monolithic per-leaf path bit-exactly.
+
 Scheme selection is a config knob so the paper's baselines are runnable
-end-to-end (Fig. 11/12 reproduction), not just as microbenchmarks.
+end-to-end (Fig. 11/12 reproduction), not just as microbenchmarks.  With
+``scheme='auto'`` the choice is **per tensor**: each row-sparse leaf consults
+its ``SparsityProfile`` (measured, via ``profiles``, or the worst-case budget
+profile) through ``costmodel.choose_scheme``.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import buckets as bk
 from repro.core import costmodel, schemes
 from repro.core.schemes import SyncStats, ZenLayout, make_zen_layout
 
@@ -40,18 +50,16 @@ class SyncConfig:
     # push + bitmap pull volume under the density budget beats dense ring
     # allreduce; otherwise that leaf falls back to dense.  This prevents
     # Zen from LOSING on high-density tensors (paper Fig. 17's crossover).
-    # The volume comparison lives in costmodel.zen_beats_dense, shared with
+    # The volume comparison lives in costmodel.choose_scheme, shared with
     # the Fig. 7 analytics.
     auto_threshold: float = 1.0   # zen_volume < threshold * dense_volume
     # Compute route for Zen's encode/decode stages: "xla" (pure jnp) or
     # "pallas" (fused kernels via repro.kernels.ops; interpret mode off-TPU).
     backend: str = "xla"
-
-
-def _leaf_path_str(path) -> str:
-    return "/".join(
-        str(getattr(p, "key", getattr(p, "idx", p))) for p in path
-    )
+    # Bucketed overlap scheduling (DESIGN.md §7): fuse dense grads into
+    # buckets of at most this many bytes and emit per-bucket sync ops
+    # double-buffered.  None = monolithic per-leaf path (bit-exact PR-1).
+    bucket_bytes: int | None = None
 
 
 class GradSync:
@@ -63,9 +71,13 @@ class GradSync:
           (e.g. ``["embed/table"]``).  Matched leaves must be 2-D
           ``[rows, d]`` row-sparse tensors.
       grad_shapes: pytree of ShapeDtypeStruct matching the grads — used to
-          precompute Zen layouts offline (per-leaf row counts).
+          precompute Zen layouts and the bucket plan offline.
       n_data: size of the data axis.
       data_axis / pod_axis: mesh axis names ('pod' may be None).
+      profiles: optional ``{leaf-path: SparsityProfile}`` of *measured*
+          sparsity (e.g. from ``costmodel.profile_from_masks``).  Under
+          scheme='auto' a profiled leaf is decided from its own curves
+          instead of the worst-case density budget.
     """
 
     def __init__(
@@ -76,6 +88,7 @@ class GradSync:
         n_data: int,
         data_axis: str = "data",
         pod_axis: str | None = None,
+        profiles: dict[str, costmodel.SparsityProfile] | None = None,
     ):
         self.cfg = cfg
         self.data_axis = data_axis
@@ -83,94 +96,108 @@ class GradSync:
         self.n_data = n_data
         self.sparse_paths = tuple(sparse_paths)
         self._layouts: dict[str, ZenLayout] = {}
-        self._auto_dense: set[str] = set()
-        leaves = jax.tree_util.tree_flatten_with_path(grad_shapes)[0]
-        for path, leaf in leaves:
-            name = _leaf_path_str(path)
-            if not self._is_sparse(name):
-                continue
+        profiles = profiles or {}
+
+        def resolve_scheme(name: str, leaf) -> str:
+            """Per-tensor scheme for one row-sparse leaf (bucket planner
+            callback).  'auto' consults the leaf's own profile."""
+            if len(leaf.shape) > 2:
+                raise ValueError(
+                    f"sparse leaf {name} must be 2-D, got {leaf.shape}")
+            if cfg.scheme != "auto":
+                return cfg.scheme
             rows = leaf.shape[0] if len(leaf.shape) >= 1 else 1
             d = leaf.shape[1] if len(leaf.shape) > 1 else 1
-            if cfg.scheme == "auto":
-                # offline worst-case volume comparison — the same zen/dense
-                # formulas as the Fig. 7 analytics (costmodel.SCHEMES)
-                if not costmodel.zen_beats_dense(
-                        rows, d, max(n_data, 2),
-                        density_budget=cfg.density_budget,
-                        threshold=cfg.auto_threshold):
-                    self._auto_dense.add(name)
-                    continue
-            if cfg.scheme in ("zen", "auto"):
-                self._layouts[name] = make_zen_layout(
-                    rows, n_data,
-                    density_budget=cfg.density_budget, key=cfg.seed,
-                    k=cfg.k, r1_factor=cfg.r1_factor, r2_ratio=cfg.r2_ratio,
-                )
+            prof = profiles.get(name)
+            if prof is None:
+                prof = costmodel.worst_case_profile(
+                    rows, cfg.density_budget, vw=max(d, 1))
+            return costmodel.choose_scheme(
+                prof, max(n_data, 2), threshold=cfg.auto_threshold)
+
+        self.plan = bk.make_bucket_plan(
+            grad_shapes, self._is_sparse, cfg.bucket_bytes, resolve_scheme)
+        for b in self.plan.buckets:
+            if b.kind != bk.SPARSE or b.scheme != "zen":
+                continue
+            slot = b.slots[0]
+            rows = slot.shape[0] if len(slot.shape) >= 1 else 1
+            self._layouts[slot.name] = make_zen_layout(
+                rows, n_data,
+                density_budget=cfg.density_budget, key=cfg.seed,
+                k=cfg.k, r1_factor=cfg.r1_factor, r2_ratio=cfg.r2_ratio,
+            )
 
     def _is_sparse(self, name: str) -> bool:
         return any(s in name for s in self.sparse_paths)
 
-    # -- per-leaf sync -------------------------------------------------------
+    # -- per-bucket sync ------------------------------------------------------
 
-    def _sync_sparse(self, name: str, g: jnp.ndarray) -> tuple[jnp.ndarray, SyncStats]:
+    def _encode_bucket(self, bucket: bk.Bucket, payload: jnp.ndarray):
+        """Local, collective-free stage (overlappable with the previous
+        bucket's wire time).  Zen buckets encode to (indices, values);
+        everything else passes through."""
+        if bucket.scheme == "zen":
+            enc = schemes.zen_encode(
+                payload, layout=self._layouts[bucket.slots[0].name],
+                backend=self.cfg.backend)
+            return (payload, enc)
+        return (payload,)
+
+    def _commit_bucket(
+        self, bucket: bk.Bucket, enc
+    ) -> tuple[jnp.ndarray, SyncStats]:
+        """Collective + decode-apply stage for one bucket."""
         cfg, ax, n = self.cfg, self.data_axis, self.n_data
-        orig_shape = g.shape
-        if g.ndim > 2:  # stacked-layer leaves: merge leading dims into rows?
-            # embedding tables are [rows, d]; stacked variants unsupported
-            raise ValueError(f"sparse leaf {name} must be 2-D, got {orig_shape}")
-        cap = max(64, int(g.shape[0] * cfg.density_budget))
-        if cfg.scheme == "auto" and name in self._auto_dense:
-            out, st = schemes.dense_sync(g, axis=ax)
-        elif cfg.scheme in ("zen", "auto"):
-            out, st = schemes.zen_sync(
-                g, axis=ax, layout=self._layouts[name],
-                use_hash_bitmap=cfg.use_hash_bitmap, backend=cfg.backend)
-        elif cfg.scheme == "agsparse":
-            out, st = schemes.agsparse_sync(g, axis=ax, capacity=cap)
-        elif cfg.scheme == "sparcml":
-            out, st = schemes.sparcml_sync(g, axis=ax, n=n, capacity=cap)
-        elif cfg.scheme == "sparse_ps":
-            # imbalanced: needs skew headroom (cap is per-partition)
-            out, st = schemes.sparse_ps_sync(
-                g, axis=ax, n=n, cap_push=cap, cap_pull=cap)
-        elif cfg.scheme == "omnireduce":
-            blk = 8
-            nb = max(8, cap // blk)
-            out, st = schemes.omnireduce_sync(
-                g, axis=ax, n=n, block=blk, cap_push=nb, cap_pull=nb)
-        elif cfg.scheme == "dense":
-            out, st = schemes.dense_sync(g, axis=ax)
+        g = enc[0]
+        if bucket.kind == bk.DENSE:
+            out = lax.psum(g, ax) / n
+            words = jnp.float32(2 * (n - 1) / n) * g.size
+            st = SyncStats(sent_words=words, overflow=jnp.int32(0))
         else:
-            raise ValueError(f"unknown scheme {cfg.scheme}")
-        return out / n, st  # mean-reduce convention (matches psum/n below)
+            name = bucket.slots[0].name
+            cap = max(64, int(g.shape[0] * cfg.density_budget))
+            if bucket.scheme == "zen":
+                out, st = schemes.zen_commit(
+                    enc[1], g, axis=ax, layout=self._layouts[name],
+                    use_hash_bitmap=cfg.use_hash_bitmap,
+                    backend=cfg.backend)
+            elif bucket.scheme == "agsparse":
+                out, st = schemes.agsparse_sync(g, axis=ax, capacity=cap)
+            elif bucket.scheme == "sparcml":
+                out, st = schemes.sparcml_sync(g, axis=ax, n=n, capacity=cap)
+            elif bucket.scheme == "sparse_ps":
+                # imbalanced: needs skew headroom (cap is per-partition)
+                out, st = schemes.sparse_ps_sync(
+                    g, axis=ax, n=n, cap_push=cap, cap_pull=cap)
+            elif bucket.scheme == "omnireduce":
+                blk = 8
+                nb = max(8, cap // blk)
+                out, st = schemes.omnireduce_sync(
+                    g, axis=ax, n=n, block=blk, cap_push=nb, cap_pull=nb)
+            elif bucket.scheme == "dense":
+                out, st = schemes.dense_sync(g, axis=ax)
+            else:
+                raise ValueError(f"unknown scheme {bucket.scheme}")
+            out = out / n  # mean-reduce convention (matches psum/n above)
+        if self.pod_axis is not None:
+            out = lax.pmean(out, self.pod_axis)
+        return out, st
 
-    # -- pytree sync -----------------------------------------------------------
+    # -- pytree sync ----------------------------------------------------------
 
     def __call__(self, grads: Any) -> tuple[Any, dict[str, jnp.ndarray]]:
         """Synchronize grads (mean over data[, pod]); returns (grads, stats)."""
-        sent = jnp.float32(0.0)
-        overflow = jnp.int32(0)
-        dense_words = jnp.float32(0.0)
+        # deferred: core must not import the train layer at module scope
+        from repro.train import schedule
 
-        def sync_leaf(path, g):
-            nonlocal sent, overflow, dense_words
-            name = _leaf_path_str(path)
-            if self._is_sparse(name):
-                out, st = self._sync_sparse(name, g)
-                sent = sent + st.sent_words
-                overflow = overflow + st.overflow
-            else:
-                out = lax.psum(g, self.data_axis) / self.n_data
-                dense_words = dense_words + jnp.float32(
-                    2 * (self.n_data - 1) / self.n_data) * g.size
-            if self.pod_axis is not None:
-                out = lax.pmean(out, self.pod_axis)
-            return out
-
-        synced = jax.tree_util.tree_map_with_path(sync_leaf, grads)
-        stats = {
-            "sync/sparse_sent_words": sent,
-            "sync/overflow": overflow,
-            "sync/dense_words": dense_words,
-        }
-        return synced, stats
+        flat, treedef = jax.tree_util.tree_flatten(grads)
+        payloads = [bk.gather_bucket(b, flat) for b in self.plan.buckets]
+        outs, per_bucket = schedule.run_schedule(
+            self.plan.buckets, payloads,
+            self._encode_bucket, self._commit_bucket)
+        synced_flat = list(flat)
+        for b, out in zip(self.plan.buckets, outs):
+            bk.scatter_bucket(b, out, synced_flat)
+        synced = jax.tree_util.tree_unflatten(treedef, synced_flat)
+        return synced, bk.reduce_stats(self.plan, per_bucket)

@@ -11,7 +11,7 @@ dry-run (no allocation).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterator
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ on TPU pass ``interpret=False``.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

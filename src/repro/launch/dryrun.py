@@ -28,11 +28,14 @@ from repro.train.steps import TrainerConfig  # noqa: E402
 
 def dryrun_combo(arch: str, shape: str, multi_pod: bool,
                  sync_scheme: str = "zen", pad_heads: bool = False,
-                 fused_attn: bool = False, moe_a2a: bool = False) -> dict:
+                 fused_attn: bool = False, moe_a2a: bool = False,
+                 bucket_bytes: int | None = None) -> dict:
     """Lower + compile one (arch, input-shape, mesh) combination.
 
     Returns the record for EXPERIMENTS.md §Dry-run / §Roofline.
-    ``pad_heads`` / ``fused_attn`` are the §Perf optimization knobs.
+    ``pad_heads`` / ``fused_attn`` are the §Perf optimization knobs;
+    ``bucket_bytes`` compiles the bucketed overlap schedule (DESIGN.md §7)
+    so its collective count/bytes land in the record.
     """
     from repro.core.zen import SyncConfig
 
@@ -41,8 +44,8 @@ def dryrun_combo(arch: str, shape: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     prog = build_program(cfg, mesh, TrainerConfig(
-        sync=SyncConfig(scheme=sync_scheme)), pad_heads=pad_heads,
-        moe_a2a=moe_a2a)
+        sync=SyncConfig(scheme=sync_scheme, bucket_bytes=bucket_bytes)),
+        pad_heads=pad_heads, moe_a2a=moe_a2a)
     mode = spec["mode"]
 
     if mode == "train":
@@ -113,6 +116,10 @@ def main():
     ap.add_argument("--all", action="store_true",
                     help="all (arch x shape) combos")
     ap.add_argument("--sync", default="zen")
+    ap.add_argument("--bucket-bytes", type=int, default=None,
+                    help="fuse dense grads into buckets of at most this "
+                         "many bytes and emit the double-buffered overlap "
+                         "schedule (DESIGN.md §7); default: monolithic")
     ap.add_argument("--pad-heads", action="store_true",
                     help="§Perf: pad+shard replicated attention heads")
     ap.add_argument("--fused-attn", action="store_true",
@@ -146,7 +153,8 @@ def main():
                     rec = dryrun_combo(arch, shape, mp, args.sync,
                                        pad_heads=args.pad_heads,
                                        fused_attn=args.fused_attn,
-                                       moe_a2a=args.moe_a2a)
+                                       moe_a2a=args.moe_a2a,
+                                       bucket_bytes=args.bucket_bytes)
                     fp.write_text(json.dumps(rec, indent=1))
                     print(f"OK   {tag}: compile={rec['compile_s']}s "
                           f"flops/dev={rec['flops_per_device']:.3e} "

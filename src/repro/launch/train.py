@@ -13,14 +13,13 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import json
 import time
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint.io import restore, save
+from repro.checkpoint.io import save
 from repro.configs import ALL_ARCHS, get_config
 from repro.core.zen import SyncConfig
 from repro.data.pipeline import DataConfig, SyntheticLM
@@ -41,9 +40,12 @@ def main():
                     help="DxM or PxDxM, e.g. 16x16 or 2x16x16")
     ap.add_argument("--sync", default="zen",
                     choices=["zen", "dense", "agsparse", "sparcml",
-                             "sparse_ps", "omnireduce"])
+                             "sparse_ps", "omnireduce", "auto"])
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--density-budget", type=float, default=0.25)
+    ap.add_argument("--bucket-bytes", type=int, default=None,
+                    help="bucketed overlap schedule: fuse dense grads into "
+                         "buckets of at most this many bytes (DESIGN.md §7)")
     ap.add_argument("--no-zero1", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
@@ -61,7 +63,8 @@ def main():
     tcfg = TrainerConfig(
         opt=OptConfig(lr=args.lr),
         sync=SyncConfig(scheme=args.sync,
-                        density_budget=args.density_budget),
+                        density_budget=args.density_budget,
+                        bucket_bytes=args.bucket_bytes),
         zero1=not args.no_zero1)
     prog = build_program(cfg, mesh, tcfg)
     attach_train(prog, args.seq_len, args.global_batch)

@@ -10,7 +10,6 @@ import math
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.models.common import ArchConfig, ParamBuilder, ShardCtx
 from repro.models import layers as L

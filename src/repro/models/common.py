@@ -128,9 +128,7 @@ class ArchConfig:
             din = self.d_inner
             ssm_per = (d * (2 * din + 2 * self.ssm_heads + 2 * self.ssm_state)
                        + din * d + din * self.ssm_conv)
-            n_shared = L // max(self.shared_attn_every, 1)
             total = emb + L * ssm_per + (attn + ffn)  # one shared block
-            del n_shared
         return total
 
     def n_active_params(self) -> int:

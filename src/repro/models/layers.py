@@ -7,7 +7,6 @@ max/sum-reductions for vocab-sharded softmax).
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

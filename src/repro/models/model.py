@@ -29,7 +29,6 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import PartitionSpec as P
 
 from repro.models.common import ArchConfig, ParamBuilder, ShardCtx
 from repro.models import layers as L
@@ -309,12 +308,17 @@ class Model:
     def make_cache(self, batch_local: int, cache_len: int, *,
                    abstract: bool = False):
         cfg, ctx = self.cfg, self.ctx
-        mk_attn = lambda: A.gqa_make_cache(cfg, ctx, batch_local, cache_len, dtype=cfg.dtype)
+        def mk_attn_concrete():
+            return A.gqa_make_cache(cfg, ctx, batch_local, cache_len,
+                                    dtype=cfg.dtype)
+
         if abstract:
-            mk_attn_inner = mk_attn
-            mk_attn = lambda: jax.tree.map(
-                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
-                jax.eval_shape(mk_attn_inner))
+            def mk_attn():
+                return jax.tree.map(
+                    lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                    jax.eval_shape(mk_attn_concrete))
+        else:
+            mk_attn = mk_attn_concrete
         cache: dict[str, Any] = {"t": _zeros((), jnp.int32, abstract)}
         if cfg.kind == "ssm":
             cache["layers"] = _stack_cache(

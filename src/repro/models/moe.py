@@ -18,7 +18,6 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.models.common import ArchConfig, ParamBuilder, ShardCtx
-from repro.models import layers as L
 
 
 def init_moe(b: ParamBuilder, name: str, cfg: ArchConfig, ctx: ShardCtx):

@@ -1,0 +1,75 @@
+"""Double-buffered emission of per-bucket sync ops (DESIGN.md §7).
+
+The monolithic trainer synchronized the whole gradient pytree in one
+``GradSync`` call — zero overlap between wire time and compute.  This
+module emits one sync chain per bucket (`repro.core.buckets.BucketPlan`)
+in a software pipeline:
+
+    enc[0] = encode(bucket 0)
+    for i in buckets:
+        enc[i+1] = encode(bucket i+1)      # local compute
+        out[i]   = commit(bucket i, enc[i])  # collective + decode-apply
+
+``encode`` is the bucket's local, collective-free stage (Zen's sparsify +
+hierarchical hash + partition extract; identity for dense buckets) and
+``commit`` is everything from the first collective on.  Because
+``enc[i+1]`` has no data dependency on ``commit(i)``, XLA's latency-hiding
+scheduler is free to run bucket *i*'s collective on the wire while bucket
+*i+1* encodes — that is the double-buffering contract.  An
+``optimization_barrier`` ties ``(enc[i], enc[i+1])`` together before
+``commit(i)`` so the compiler can neither hoist every encode to the front
+(peak-memory blowup) nor sink a commit past its successor's encode
+(serializing the pipeline).  The barrier is the identity on values:
+scheduling changes bits never.
+
+With a single bucket (``bucket_bytes=None`` fallback) the loop degenerates
+to encode-then-commit per leaf — op-for-op the monolithic path.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+from jax import lax
+
+from repro.core.buckets import Bucket
+from repro.core.schemes import SyncStats
+
+
+def _fence(tree):
+    """``optimization_barrier`` as a value-identity scheduling fence.
+
+    Under ``vmap`` (the single-device scheme simulation used by tests and
+    traffic accounting) some jax versions have no batching rule for the
+    barrier — there is no scheduler to fence there, so it degrades to the
+    identity.  Under jit/shard_map (the trainer) the barrier is real."""
+    try:
+        return lax.optimization_barrier(tree)
+    except NotImplementedError:
+        return tree
+
+
+def run_schedule(
+    buckets: Sequence[Bucket],
+    payloads: Sequence[Any],
+    encode: Callable[[Bucket, Any], Any],
+    commit: Callable[[Bucket, Any], tuple[Any, SyncStats]],
+) -> tuple[list[Any], list[SyncStats]]:
+    """Emit the double-buffered per-bucket sync pipeline.
+
+    Returns (synced payloads, per-bucket SyncStats), both in bucket order.
+    """
+    nb = len(buckets)
+    outs: list[Any] = [None] * nb
+    stats: list[SyncStats] = [None] * nb
+    if nb == 0:
+        return outs, stats
+    enc = encode(buckets[0], payloads[0])
+    for i, b in enumerate(buckets):
+        nxt = encode(buckets[i + 1], payloads[i + 1]) if i + 1 < nb else None
+        if nxt is not None:
+            # value-identity fence: bucket i+1's encode must be materialized
+            # before bucket i's commit results are consumed (double buffer).
+            enc, nxt = _fence((enc, nxt))
+        outs[i], stats[i] = commit(b, enc)
+        enc = nxt
+    return outs, stats

@@ -5,9 +5,15 @@ Gradient flow inside one train step:
   1. local grads via ``jax.value_and_grad`` of the per-device loss;
   2. model-replicated leaves (norms, KV projections, router) are psum'd over
      the ``model`` axis (their true gradient sums each rank's path);
-  3. ``GradSync`` synchronizes over ``data`` (+ ``pod``): Zen (or a baseline
-     scheme) for the row-sparse embedding table, psum for dense leaves —
-     this step IS the paper's subject;
+  3. ``GradSync`` synchronizes over ``data`` (+ ``pod``) — this step IS the
+     paper's subject.  The pytree is partitioned into fixed-byte buckets
+     (``repro.core.buckets``): dense leaves fuse into flat psum buckets,
+     row-sparse tables stay whole and get a per-tensor scheme (Zen or a
+     baseline; 'auto' decides leaf-by-leaf from the cost model).  Bucket
+     sync ops are emitted double-buffered (``repro.train.schedule``) so
+     XLA's latency-hiding scheduler can overlap bucket *i*'s collective
+     with bucket *i+1*'s encode.  ``SyncConfig.bucket_bytes=None`` keeps
+     the monolithic per-leaf path bit-exactly;
   4. ZeRO-1 update: each (pod, data) rank updates its flat chunk of every
      leaf and the new params are all-gathered back.
 
@@ -17,7 +23,6 @@ from ``repro.models`` (context-parallel decode over ``model``).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -27,7 +32,7 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.zen import GradSync, SyncConfig
-from repro.models.common import ArchConfig, ShardCtx
+from repro.models.common import ShardCtx
 from repro.models.model import Model
 from repro.optim.optimizers import INITS, UPDATES, OptConfig
 
@@ -162,8 +167,12 @@ def local_param_shapes(param_shapes, param_specs, ctx: ShardCtx):
 
 
 def make_train_step(model: Model, tcfg: TrainerConfig, param_specs,
-                    param_shapes=None):
-    """Returns the per-device step fn (to be wrapped in shard_map)."""
+                    param_shapes=None, sparsity_profiles=None):
+    """Returns the per-device step fn (to be wrapped in shard_map).
+
+    ``sparsity_profiles`` (optional ``{leaf-path: SparsityProfile}``) feeds
+    measured densification/skew curves into GradSync's per-tensor 'auto'
+    scheme choice (otherwise the worst-case budget profile decides)."""
     ctx = model.ctx
     world = _zero_world(ctx)
     zaxes = zero_axes(ctx)
@@ -172,14 +181,16 @@ def make_train_step(model: Model, tcfg: TrainerConfig, param_specs,
     spec_leaves = jax.tree.leaves(
         param_specs, is_leaf=lambda x: isinstance(x, P))
 
-    # GradSync is precomputed OFFLINE (hash layouts etc.), from the local
-    # (per-device) grad shapes — grads match param shards inside shard_map.
+    # GradSync is precomputed OFFLINE (hash layouts, the bucket plan), from
+    # the local (per-device) grad shapes — grads match param shards inside
+    # shard_map.
     if param_shapes is None:
         param_shapes = model.abstract()[0]
     grad_shapes = local_param_shapes(param_shapes, param_specs, ctx)
     gradsync = GradSync(
         tcfg.sync, list(model.sparse_paths), grad_shapes, ctx.dp,
-        data_axis=ctx.dp_axis, pod_axis=ctx.pod_axis)
+        data_axis=ctx.dp_axis, pod_axis=ctx.pod_axis,
+        profiles=sparsity_profiles)
 
     def step_fn(params, opt_state, batch):
         (loss, metrics), grads = jax.value_and_grad(
@@ -194,7 +205,7 @@ def make_train_step(model: Model, tcfg: TrainerConfig, param_specs,
             ]
             grads = jax.tree.unflatten(treedef, flat_g)
 
-        # --- 3. data(+pod)-axis sync: Zen / baselines -----------------------
+        # --- 3. data(+pod)-axis sync: bucketed, overlap-scheduled -----------
         grads, sync_stats = gradsync(grads)
         metrics = {**metrics, **sync_stats}
 

@@ -1,12 +1,11 @@
 """Sparse formats: roundtrips, wire sizes, Thm. 3 (hash bitmap)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.core import formats as F
-from repro.core.hashing import EMPTY, make_seeds
+from repro.core.hashing import make_seeds
 
 
 def _dense(rng, m, density, d=None):

@@ -1,12 +1,10 @@
 """Algorithm 1 (hierarchical hashing): correctness + Thm. 2 properties."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.core import hashing as H
-from repro.core import metrics
 
 
 def _random_indices(rng, universe, nnz, cap):

@@ -1,7 +1,6 @@
 """The trip-count-aware HLO walker against closed-form ground truth."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax import lax
 

@@ -12,13 +12,9 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core.zen import SyncConfig
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.kernels.flash import flash_fwd
-from repro.launch.mesh import make_mesh
 from repro.models.layers import flash_attention
-from repro.train.build import attach_train, build_program
-from repro.train.steps import TrainerConfig
 
 
 def test_pad_heads_function_identical():

@@ -84,7 +84,6 @@ def test_zen_balanced_vs_sparse_ps_imbalanced():
     rng = np.random.default_rng(0)
     hot = np.zeros(m, bool)
     hot[: m // n] = rng.uniform(size=m // n) < 0.8   # all nnz in partition 0
-    vals = jnp.asarray(rng.standard_normal(m) * hot)[None].repeat(n, 0)
 
     # sparse PS partition loads = per contiguous range
     counts_ps = hot.reshape(n, -1).sum(1)
