@@ -7,10 +7,20 @@ PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 # formatter and reflowing it would bury real diffs)
 FORMATTED := src/repro/train/schedule.py benchmarks/check_regression.py
 
-.PHONY: test lint bench-smoke bench-gate ci
+.PHONY: test lint check-bytecode bench-smoke bench-gate ci
 
 test:
 	$(PY) -m pytest -x -q
+
+# fail if any python bytecode is tracked by git (a PR-2 leak committed 84
+# __pycache__ files; .gitignore prevents new ones, this gate enforces it)
+check-bytecode:
+	@if git ls-files | grep -E '\.pyc$$|__pycache__'; then \
+		echo "ERROR: bytecode files are tracked by git (see above)"; \
+		exit 1; \
+	else \
+		echo "no tracked bytecode"; \
+	fi
 
 # ruff check uses the default E4/E7/E9/F rule set (ruff.toml); the CI lint
 # job installs ruff — locally we skip with a note if it is absent so
@@ -35,4 +45,13 @@ bench-gate:
 	$(PY) -m benchmarks.micro_sync --smoke --json BENCH_smoke.json
 	$(PY) -m benchmarks.check_regression BENCH_sync.json BENCH_smoke.json
 
-ci: lint test bench-smoke
+# refresh the committed perf baseline: a full run for trajectory coverage,
+# then the gate-shared entries re-measured by the SAME --smoke procedure CI
+# replays (full-mode runs warm caches differently — observed up to 1.4x
+# full-vs-smoke bias on sparse_ps — so like must be compared with like)
+bench-baseline:
+	$(PY) -m benchmarks.micro_sync BENCH_sync.json
+	$(PY) -m benchmarks.micro_sync --smoke --json BENCH_smoke.json
+	$(PY) -m benchmarks.merge_baseline BENCH_sync.json BENCH_smoke.json
+
+ci: lint check-bytecode test bench-smoke

@@ -13,12 +13,15 @@ committed the baseline), and each entry is judged against that scale:
   improvement — a hint to refresh the committed baseline, never a failure;
 * entries present on only one side are reported and skipped (smoke runs
   carry a density subset of the full baseline);
-* entries whose baseline time is below ``--min-us`` (default 2000) are
-  gated only against a loose 2x bound: their floors were measured to
-  swing ±25% across processes on an idle host, so the ±30% tolerance
-  would be pure jitter there — but a genuine 3x stage blow-up (the
-  regression the fast path exists to prevent) still fails; below 0.5ms
-  (``JITTER_US``, observed swinging >3x) entries are reported only;
+* entries whose baseline time is below ``--min-us`` (default 30000) are
+  gated only against a loose 2x bound: entries in the 2-30ms band were
+  measured swinging up to ~1.8x across processes on an idle host (6-run
+  spread of sparcml/sparse_ps/bucketed; the floor was chosen as the
+  tightest value with zero false failures over all ordered pairs of
+  those runs), so the ±30% tolerance would be pure jitter there — but a
+  genuine 3x stage blow-up (the regression the fast path exists to
+  prevent) still fails; below 0.5ms (``JITTER_US``, observed swinging
+  >3x) entries are reported only;
 * because gating is relative to the scale, a perfectly *uniform*
   slowdown of every entry recalibrates the scale and passes — that is
   the price of a baseline that must survive host changes; the absolute
@@ -94,7 +97,7 @@ def _gate_bucketed_pairs(base: dict, new: dict, tolerance: float) -> list:
 
 
 def compare(
-    baseline: dict, fresh: dict, tolerance: float, min_us: float = 2000.0
+    baseline: dict, fresh: dict, tolerance: float, min_us: float = 30000.0
 ) -> int:
     base, new = _index(baseline), _index(fresh)
     shared = [n for n in new if n in base and base[n]["us"] > 0]
@@ -158,7 +161,7 @@ def main(argv=None) -> int:
     ap.add_argument("fresh", help="freshly produced micro_sync JSON")
     default_tol = float(os.environ.get("BENCH_TOLERANCE", "0.30"))
     ap.add_argument("--tolerance", type=float, default=default_tol)
-    ap.add_argument("--min-us", type=float, default=2000.0)
+    ap.add_argument("--min-us", type=float, default=30000.0)
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)

@@ -65,6 +65,7 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
 def synthetic_grad_tree(
     n_workers: int, *, n_dense: int = 512, dense_size: int = 64,
     rows: int = 1024, d: int = 8, density: float = 0.05, seed: int = 0,
+    with_table: bool = True,
 ):
     """A model-shaped gradient pytree: one row-sparse embedding table plus
     ``n_dense`` small dense leaves (biases, norms, router weights — the
@@ -73,37 +74,62 @@ def synthetic_grad_tree(
     for: per-leaf sync pays a fixed dispatch/collective cost per tiny
     tensor, fused buckets pay it once per ``bucket_bytes``.
 
+    ``with_table=False`` drops the embedding table — the all-dense tree
+    the EF compression series uses, where every byte on the wire comes
+    from *induced* sparsity.
+
     Returns (abstract shapes for GradSync, per-worker grads [n, ...])."""
     key = jax.random.PRNGKey(seed)
     kt, km, kd = jax.random.split(key, 3)
     shapes = {
-        "embed": {"table": jax.ShapeDtypeStruct((rows, d), jnp.float32)},
         "layers": {
             f"w{i:02d}": jax.ShapeDtypeStruct((dense_size,), jnp.float32)
             for i in range(n_dense)
         },
     }
-    mask = metrics.synth_sparse_masks(km, n_workers, rows, density)
     grads = {
-        "embed": {"table":
-                  jax.random.normal(kt, (n_workers, rows, d))
-                  * mask[..., None]},
         "layers": {
             f"w{i:02d}": jax.random.normal(
                 jax.random.fold_in(kd, i), (n_workers, dense_size))
             for i in range(n_dense)
         },
     }
+    if with_table:
+        shapes["embed"] = {
+            "table": jax.ShapeDtypeStruct((rows, d), jnp.float32)}
+        mask = metrics.synth_sparse_masks(km, n_workers, rows, density)
+        grads["embed"] = {
+            "table": jax.random.normal(kt, (n_workers, rows, d))
+            * mask[..., None]}
     return shapes, grads
 
 
 def build_gradsync_run(sync_cfg, shapes, grads, n_workers: int):
-    """Jit one vmapped GradSync step; returns (run fn, stats, plan)."""
+    """Jit one vmapped GradSync step; returns (run fn, stats, plan).
+
+    With EF compression configured, every timed call replays the t=0 EF
+    step (zero residual, step=0) so the timed function still takes only
+    the gradient tree.  Top-k is shape-static, so step timing and wire
+    volume match steady state; a series that needs steady-state
+    *density* (threshold compression) must thread the residual instead
+    of reusing this helper."""
     from repro.core.zen import GradSync
 
     gs = GradSync(sync_cfg, ["embed/table"], shapes, n_workers,
                   data_axis="data")
-    run = jax.jit(lambda g: jax.vmap(gs, axis_name="data")(g))
+    if gs.has_compression:
+        res0 = {k: jnp.tile(v[None], (n_workers,) + (1,) * v.ndim)
+                for k, v in gs.init_residual().items()}
+
+        def run_once(g):
+            synced, _, stats = jax.vmap(
+                lambda gg, rr: gs(gg, rr, step=jnp.int32(0)),
+                axis_name="data")(g, res0)
+            return synced, stats
+
+        run = jax.jit(run_once)
+    else:
+        run = jax.jit(lambda g: jax.vmap(gs, axis_name="data")(g))
     _, stats = jax.block_until_ready(run(grads))
     return run, stats, gs.plan
 

@@ -4,15 +4,32 @@
 Executable version: train the reduced qwen2 for K steps under (a) dense
 psum, (b) Zen, (c) a lossy strawman sync (drops hash-collided rows), and
 compare loss trajectories.
+
+Beyond the paper (DESIGN.md §8): the **EF sweep** adds the
+accuracy-vs-compression axis for *induced* sparsity.  A 4-worker
+heterogeneous least-squares smoke config (large zero-mean per-worker
+offsets on a few coordinates, a small shared signal everywhere else —
+the canonical top-k cancellation workload) is trained under dense sync,
+top-k **with** error feedback, and top-k **without**.  Per-worker top-k
+always spends its budget on the offset coordinates, whose mean cancels,
+so without EF the shared signal is never transmitted and the loss stalls
+~23% above optimum; with EF the residual memory re-sends the dropped
+signal and the (tail-averaged) loss lands within 2% of dense.  The
+asserts below hold the full sweep to that bar on every bench run; the
+CI-resident twin of this gate (same failure modes: residual sign,
+cast-subtraction, worker cancellation) is
+``tests/test_sparsify.py::test_topk_with_ef_converges_where_plain_topk_stalls``,
+which runs in every tier-1 leg.
 """
 import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_config
-from repro.core.zen import SyncConfig
+from repro.core.zen import GradSync, SyncConfig
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_mesh
 from repro.optim.optimizers import OptConfig
@@ -22,13 +39,16 @@ from repro.train.steps import TrainerConfig
 STEPS = 8
 
 
-def run(scheme: str, budget: float = 0.9):
+def run(scheme: str, budget: float = 0.9, compress: str = "none"):
     cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
                               dtype=jnp.float32)
     mesh = make_mesh((1, 1), ("data", "model"))
     prog = build_program(cfg, mesh, TrainerConfig(
         opt=OptConfig(lr=1e-3),
-        sync=SyncConfig(scheme=scheme, density_budget=budget)))
+        sync=SyncConfig(scheme=scheme, density_budget=budget,
+                        compress=compress,
+                        bucket_bytes=1 << 16 if compress != "none"
+                        else None)))
     attach_train(prog, seq_len=32, global_batch=4)
     params = prog.init_params(0)
     opt = prog.init_opt(params)
@@ -46,6 +66,81 @@ def run(scheme: str, budget: float = 0.9):
     return losses, step_t
 
 
+# ---------------------------------------------------------------------------
+# EF sweep (induced sparsity): the accuracy-vs-compression axis
+# ---------------------------------------------------------------------------
+
+EF_WORKERS = 4
+EF_DIM = 256
+EF_OFFSET_COORDS = 16     # coordinates carrying the cancelling worker skew
+EF_STEPS = 150
+EF_LR = 0.1
+
+
+def _ef_problem():
+    """Worker targets c_i = mu + v_i: mu is a small shared signal on every
+    coordinate, v_i are large zero-mean offsets on the first few — so
+    per-worker top-k (k = EF_OFFSET_COORDS) always picks the offsets."""
+    mu = jnp.full((EF_DIM,), 0.5)
+    pat = jnp.tile(jnp.asarray([1.0, 1.0, -1.0, -1.0])[:, None],
+                   (1, EF_OFFSET_COORDS))
+    v = jnp.zeros((EF_WORKERS, EF_DIM)).at[:, :EF_OFFSET_COORDS].set(
+        4.0 * pat)
+    return mu[None] + v  # [W, M]
+
+
+def _ef_run(compress: str) -> float:
+    """Distributed SGD on f_i(x) = ||x - c_i||^2 / 2 (simulated workers,
+    the repo's vmap idiom); returns the loss of the tail-averaged iterate
+    (constant-step EF limit-cycles; its Cesàro average converges)."""
+    c = _ef_problem()
+    gs = GradSync(SyncConfig(scheme="dense", compress=compress), [],
+                  {"x": jax.ShapeDtypeStruct((EF_DIM,), jnp.float32)},
+                  EF_WORKERS, data_axis="data")
+    res = gs.init_residual()
+    resb = {k: jnp.zeros((EF_WORKERS, *r.shape), r.dtype)
+            for k, r in res.items()}
+
+    @jax.jit
+    def sync(g, r, t):
+        return jax.vmap(lambda gg, rr: gs({"x": gg}, rr, step=t),
+                        axis_name="data")(g, r)
+
+    x = jnp.zeros(EF_DIM)
+    tail = []
+    for t in range(EF_STEPS):
+        g = x[None] - c
+        if compress == "none":
+            synced = {"x": jnp.mean(g, axis=0)[None]}
+        else:
+            synced, resb, _ = sync(g, resb, jnp.int32(t))
+        x = x - EF_LR * synced["x"][0]
+        if t >= EF_STEPS // 2:
+            tail.append(np.asarray(x))
+    xa = np.mean(tail, axis=0)
+    return 0.5 * float(np.mean(np.sum((xa[None] - np.asarray(c)) ** 2, -1)))
+
+
+def ef_sweep() -> None:
+    density = EF_OFFSET_COORDS / EF_DIM
+    spec = f"topk:{density:g}"
+    f_dense = _ef_run("none")
+    f_ef = _ef_run(spec)
+    f_noef = _ef_run(f"{spec}:noef")
+    gap_ef = (f_ef - f_dense) / f_dense
+    gap_noef = (f_noef - f_dense) / f_dense
+    emit("fig14/ef_dense", 0.0, f"loss={f_dense:.3f}")
+    emit("fig14/ef_topk", 0.0, f"loss={f_ef:.3f} gap={gap_ef:+.3%}")
+    emit("fig14/ef_topk_noef", 0.0,
+         f"loss={f_noef:.3f} gap={gap_noef:+.3%}")
+    # the acceptance bar: EF top-k matches dense within 2%; plain top-k
+    # does not (the dropped shared signal never reaches the optimizer)
+    assert abs(gap_ef) <= 0.02, f"EF top-k gap {gap_ef:+.3%} exceeds 2%"
+    assert abs(gap_noef) > 0.02, (
+        f"plain top-k gap {gap_noef:+.3%} unexpectedly within 2% — the "
+        f"cancellation workload no longer stresses error feedback")
+
+
 def main() -> None:
     dense, t_dense = run("dense")
     zen, t_zen = run("zen")
@@ -57,12 +152,18 @@ def main() -> None:
          f"loss={zen[-1]:.4f} max_dev={max(abs(a - b) for a, b in zip(dense, zen)):.2e}")
     emit("fig14/lossy_final", 0.0,
          f"loss={lossy[-1]:.4f} gap={lossy[-1] - dense[-1]:+.4f}")
+    # EF-compressed LM training end-to-end (trainer path; informational —
+    # the hard accuracy gate is the deterministic ef_sweep below)
+    lm_ef, _ = run("auto", compress="topk:0.05")
+    emit("fig14/lm_topk_ef", 0.0,
+         f"loss={lm_ef[-1]:.4f} gap={lm_ef[-1] - dense[-1]:+.4f}")
     assert max(abs(a - b) for a, b in zip(dense, zen)) < 5e-3
     # the lossy scheme DEVIATES from the dense trajectory (information was
     # lost); over a few steps the deviation can go either way, so we assert
     # deviation, not direction (the paper's long-horizon accuracy drop is
     # about losing signal, which the deviation demonstrates)
     assert max(abs(a - b) for a, b in zip(dense, lossy)) > 1e-3
+    ef_sweep()
 
 
 if __name__ == "__main__":

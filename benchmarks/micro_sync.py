@@ -177,6 +177,63 @@ def bench_bucketed(results: list, densities=DENSITIES) -> None:
              f"mono/bucketed={times['mono'] / times['bucketed']:.2f}x")
 
 
+COMPRESS_DENSITIES = (0.01, 0.05)  # smoke keeps 0.01: the acceptance bar
+
+
+def bench_compress(results: list, densities=COMPRESS_DENSITIES) -> None:
+    """The induced-sparsity series (DESIGN.md §8): an all-dense gradient
+    tree synced (a) as fused dense psum buckets and (b) EF top-k
+    compressed under scheme='auto'.  Tracks the wire-volume win and the
+    EF step-time cost; the acceptance bar — topk+EF wire volume <= 10% of
+    dense at density 0.01 with zen selected by 'auto' — is asserted here,
+    so the CI bench gate enforces it on every run."""
+    from repro.core import buckets as bkt
+    from repro.core.zen import SyncConfig
+
+    shapes, grads = synthetic_grad_tree(
+        N, n_dense=64, dense_size=1024, with_table=False)
+    total = sum(s.size for s in jax.tree.leaves(shapes))
+    for density in densities:
+        arms = {}
+        cfgs = {
+            "dense": SyncConfig(scheme="dense", bucket_bytes=BUCKET_BYTES),
+            "topk": SyncConfig(scheme="auto", bucket_bytes=BUCKET_BYTES,
+                               compress=f"topk:{density:g}"),
+        }
+        for tag, cfg in cfgs.items():
+            arms[tag] = build_gradsync_run(cfg, shapes, grads, N)
+        times = time_ab({t: a[0] for t, a in arms.items()}, grads, rounds=50)
+        wire = {}
+        for tag, (_, stats, plan) in arms.items():
+            sparse_w = float(
+                np.asarray(stats["sync/sparse_sent_words"]).mean())
+            dense_w = float(np.asarray(stats["sync/dense_words"]).mean())
+            wire[tag] = sparse_w + dense_w
+            schemes = sorted({b.scheme for b in plan.buckets
+                              if b.kind == bkt.DENSE})
+            _record(
+                results, f"compress[{tag},d={density}]", times[tag],
+                stage="compress_e2e", density=density, backend="xla",
+                compress="none" if tag == "dense" else f"topk:{density:g}",
+                schemes=",".join(schemes),
+                sent_words=sparse_w, dense_words=dense_w,
+                overflow=int(np.asarray(stats["sync/overflow"]).sum()),
+            )
+        ratio = wire["topk"] / wire["dense"]
+        emit(f"micro_sync/compress_wire_ratio[d={density}]", 0.0,
+             f"topk/dense={ratio:.4f} M={total}")
+        if density <= 0.01:
+            _, _, plan = arms["topk"]
+            dense_schemes = {b.scheme for b in plan.buckets
+                             if b.compress != "none"}
+            assert dense_schemes == {"zen"}, (
+                f"'auto' picked {dense_schemes} for topk:{density:g} "
+                f"buckets — expected zen")
+            assert ratio <= 0.10, (
+                f"topk+EF wire volume {ratio:.2%} of dense at density "
+                f"{density} — acceptance bar is 10%")
+
+
 def main(argv=()) -> None:
     ap = argparse.ArgumentParser(prog="benchmarks.micro_sync")
     ap.add_argument("out", nargs="?", default=None,
@@ -195,6 +252,9 @@ def main(argv=()) -> None:
     args = ap.parse_args(list(argv))
 
     densities = (0.05,) if args.smoke else DENSITIES
+    # the compress series keeps d=0.01 in BOTH modes: the <=10%-of-dense
+    # acceptance assert must hold on every CI bench-gate run
+    compress_densities = (0.01,) if args.smoke else COMPRESS_DENSITIES
     repeat = args.repeat
     best: dict[str, dict] = {}
     pair_best: dict[float, tuple[float, list]] = {}
@@ -203,6 +263,7 @@ def main(argv=()) -> None:
         bench_stages(results)
         bench_end_to_end(results, densities)
         bench_bucketed(results, densities)
+        bench_compress(results, compress_densities)
         for r in results:
             if r.get("stage") == "bucketed_e2e":
                 continue  # merged pairwise below

@@ -12,6 +12,7 @@ JSON report is written even when modules fail.
 """
 import argparse
 import importlib
+import inspect
 import json
 import sys
 import time
@@ -35,7 +36,15 @@ MODULES = [
 ]
 
 
-def _run_module(name: str) -> str:
+# per-module argv for ``--smoke`` (the CI bench-gate pass): modules whose
+# main() takes argv get their quick single-density configuration; all
+# others already run in seconds and need no smoke variant
+SMOKE_ARGS = {
+    "micro_sync": ("--smoke", "--json", "BENCH_smoke.json"),
+}
+
+
+def _run_module(name: str, smoke: bool = False) -> str:
     """Import + run one benchmark; returns 'ok' or 'FAILED <reason>'.
 
     ``SystemExit`` is treated like any other failure (recorded, the loop
@@ -43,7 +52,11 @@ def _run_module(name: str) -> str:
     remaining modules mid-run with whatever code the module chose."""
     try:
         mod = importlib.import_module(f"benchmarks.{name}")
-        mod.main()
+        argv = SMOKE_ARGS.get(name) if smoke else None
+        if argv is not None and inspect.signature(mod.main).parameters:
+            mod.main(argv)
+        else:
+            mod.main()
         return "ok"
     except SystemExit as e:
         if not e.code:  # sys.exit(0)/sys.exit(None): a successful exit
@@ -58,6 +71,10 @@ def main() -> None:
     ap = argparse.ArgumentParser(prog="benchmarks.run")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write a JSON report of module timings/status")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI bench-gate pass: quick single-density configs "
+                         "(micro_sync writes BENCH_smoke.json for "
+                         "benchmarks.check_regression)")
     ap.add_argument("modules", nargs="*",
                     help=f"subset to run (default: all of {MODULES})")
     args = ap.parse_args()
@@ -66,7 +83,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in (args.modules or MODULES):
         t0 = time.perf_counter()
-        status = _run_module(name)
+        status = _run_module(name, smoke=args.smoke)
         if status != "ok":
             failures.append(name)
         us = (time.perf_counter() - t0) * 1e6

@@ -3,6 +3,19 @@
 1. Build skewed sparse gradients on 8 simulated workers.
 2. Synchronize them with Zen (hierarchical hashing + hash bitmap).
 3. Verify exactness vs dense allreduce and compare wire volume.
+4. Induce sparsity on DENSE gradients with error-feedback top-k
+   (``--compress``) and watch 'auto' route them through Zen.
+
+Dense models have nothing naturally sparse to ship — ``--compress
+topk:0.01`` (on ``launch/train.py`` / ``launch/dryrun.py``, or
+``SyncConfig(compress="topk:0.01")`` in code) keeps only the top 1% of
+each fused gradient bucket and carries the rest in an error-feedback
+residual inside optimizer state, so nothing is lost, only deferred.
+The compressed buckets then ride the same sparse schemes as embedding
+tables — under ``scheme='auto'`` the cost model picks zen vs dense per
+bucket from the *measured* post-compression density (``--replan-every``
+closes that feedback loop during training).  Append ``:noef`` to see
+why the residual matters (benchmarks/fig14_accuracy.py quantifies it).
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -40,3 +53,26 @@ print(f"wire volume: zen={zen_words:,.0f} words, "
       f"allreduce={dense_words:,.0f} words "
       f"-> {dense_words / zen_words:.1f}x less traffic")
 assert err < 1e-5
+
+# --- induced sparsity: EF top-k on a DENSE gradient tree ----------------
+from repro.core.zen import GradSync, SyncConfig  # noqa: E402
+
+shapes = {"mlp": {f"w{i}": jax.ShapeDtypeStruct((4096,), jnp.float32)
+                  for i in range(8)}}
+dense_grads = {"mlp": {f"w{i}": jax.random.normal(
+    jax.random.fold_in(key, i), (N_WORKERS, 4096)) for i in range(8)}}
+gs = GradSync(SyncConfig(scheme="auto", compress="topk:0.01",
+                         bucket_bytes=1 << 14),
+              [], shapes, N_WORKERS, data_axis="data")
+resid = {k: jnp.zeros((N_WORKERS, *r.shape), r.dtype)
+         for k, r in gs.init_residual().items()}
+_, resid, stats = jax.vmap(lambda g, r: gs(g, r), axis_name="data")(
+    dense_grads, resid)
+wire = float(np.asarray(stats["sync/sparse_sent_words"]).mean()) \
+    + float(np.asarray(stats["sync/dense_words"]).mean())
+ring = 2 * (N_WORKERS - 1) / N_WORKERS * 8 * 4096
+print(f"EF top-k 1% on dense grads: schemes={gs.bucket_schemes()} "
+      f"wire={wire:,.0f} vs allreduce={ring:,.0f} words "
+      f"({wire / ring:.1%}); dropped mass held in "
+      f"{len(resid)} residual buckets")
+assert wire < 0.10 * ring

@@ -58,10 +58,23 @@ class Bucket:
     scheme: str                   # resolved sync scheme for this bucket
     slots: tuple[LeafSlot, ...]   # exactly 1 slot when kind == SPARSE
     nbytes: int
+    # Compressor tag (core/sparsify.py spec string, e.g. 'topk:0.01') for
+    # dense buckets whose payload is EF-sparsified before sync; 'none'
+    # otherwise.  Row-sparse buckets are never compressed — they arrive
+    # sparse, and the Zen layout already budgets their density.
+    compress: str = "none"
 
     @property
     def size(self) -> int:
         return sum(s.size for s in self.slots)
+
+    @property
+    def key(self) -> str:
+        """Stable identity for per-bucket state (EF residuals, density
+        EMAs, Zen layouts): the first slot's leaf path.  Bucket
+        *boundaries* depend only on shapes/dtypes/bucket_bytes — never on
+        schemes, profiles, or the compressor — so keys survive replans."""
+        return self.slots[0].name
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +101,9 @@ class BucketPlan:
                 seen.add(s.index)
             if b.kind == SPARSE and len(b.slots) != 1:
                 raise ValueError(f"sparse bucket {b.bid} fuses leaves")
+            if b.kind == SPARSE and b.compress != "none":
+                raise ValueError(
+                    f"row-sparse bucket {b.bid} must not be compressed")
             if (self.bucket_bytes is not None and b.kind == DENSE
                     and len(b.slots) > 1 and b.nbytes > self.bucket_bytes):
                 raise ValueError(
@@ -113,12 +129,18 @@ def make_bucket_plan(
     bucket_bytes: int | None,
     sparse_scheme: Callable[[str, Any], str],
     dense_scheme: str = "dense",
+    compress: str = "none",
+    compressed_scheme: Callable[[str, int], str] | None = None,
 ) -> BucketPlan:
     """Build the plan from abstract grad shapes (offline, untraced).
 
     ``sparse_scheme(name, leaf)`` resolves the per-tensor scheme for a
     row-sparse leaf (the 'auto' cost-model decision lives in the caller);
-    dense buckets always use ``dense_scheme``.
+    dense buckets use ``dense_scheme`` — unless ``compress`` is a
+    sparsifier tag (core/sparsify.py), in which case every dense bucket
+    is tagged with it and its scheme comes from
+    ``compressed_scheme(key, size)`` (the caller's cost-model decision on
+    the *post-compression* density profile).
     """
     if bucket_bytes is not None and bucket_bytes <= 0:
         raise ValueError(f"bucket_bytes must be positive, got {bucket_bytes}")
@@ -130,9 +152,13 @@ def make_bucket_plan(
     def flush():
         nonlocal pend, pend_bytes
         if pend:
+            scheme = dense_scheme
+            if compress != "none" and compressed_scheme is not None:
+                scheme = compressed_scheme(
+                    pend[0].name, sum(s.size for s in pend))
             buckets.append(Bucket(
-                bid=len(buckets), kind=DENSE, scheme=dense_scheme,
-                slots=tuple(pend), nbytes=pend_bytes))
+                bid=len(buckets), kind=DENSE, scheme=scheme,
+                slots=tuple(pend), nbytes=pend_bytes, compress=compress))
             pend, pend_bytes = [], 0
 
     for i, (path, leaf) in enumerate(leaves):
@@ -195,31 +221,43 @@ def scatter_bucket(bucket: Bucket, payload: jnp.ndarray, out: list) -> None:
 # ---------------------------------------------------------------------------
 
 def reduce_stats(
-    plan: BucketPlan, per_bucket: list[SyncStats]
+    plan: BucketPlan, per_bucket: list[SyncStats],
+    extra: dict[str, jnp.ndarray] | None = None,
 ) -> dict[str, jnp.ndarray]:
     """Reduce per-bucket SyncStats into the trainer's metric dict.
 
     Keeps the monolithic path's keys (sparse_sent_words / overflow /
     dense_words) so dashboards and the multi-device tests are unchanged,
     and adds per-scheme bucket tags — static plan facts reported as
-    constants so they survive the pmean over data."""
+    constants so they survive the pmean over data.  ``dense_words``
+    counts the fused-psum buckets; everything synchronized with a sparse
+    scheme — row-sparse leaves AND compressed dense buckets — lands in
+    ``sparse_sent_words`` (for uncompressed plans the split is identical
+    to the historical by-kind accounting, because dense buckets always
+    carried scheme='dense' there).  ``extra`` merges caller-supplied
+    per-bucket metrics (e.g. the EF density measurements)."""
     sent = jnp.float32(0.0)
     dense_words = jnp.float32(0.0)
     overflow = jnp.int32(0)
     tags: dict[str, int] = {}
+    n_compressed = 0
     for b, st in zip(plan.buckets, per_bucket):
         overflow = overflow + st.overflow
-        if b.kind == SPARSE:
+        if b.kind == SPARSE or b.scheme != "dense":
             sent = sent + st.sent_words
         else:
             dense_words = dense_words + st.sent_words
         tags[b.scheme] = tags.get(b.scheme, 0) + 1
+        n_compressed += b.compress != "none"
     stats = {
         "sync/sparse_sent_words": sent,
         "sync/overflow": overflow,
         "sync/dense_words": dense_words,
         "sync/n_buckets": jnp.float32(len(plan.buckets)),
     }
+    if n_compressed:
+        stats["sync/compressed_buckets"] = jnp.float32(n_compressed)
     for scheme, count in sorted(tags.items()):
         stats[f"sync/buckets[{scheme}]"] = jnp.float32(count)
+    stats.update(extra or {})
     return stats

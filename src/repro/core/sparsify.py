@@ -1,0 +1,293 @@
+"""Error-feedback gradient sparsification (DESIGN.md §8).
+
+The paper's schemes assume the gradient arrives sparse (embedding / MoE
+rows).  This module *induces* sparsity on dense gradients so the whole
+scheme/cost-model stack (buckets, Zen, `costmodel.choose_scheme`) applies
+to every workload, not only row-sparse tables:
+
+* **Sparsifiers** — ``topk`` (largest-|g| elements, exactly
+  ``ceil(density * M)`` kept), ``threshold`` (``|g| >= tau``), ``randk``
+  (Bernoulli(density) mask, deterministic in ``(seed, step)``).  All are
+  pure functions of their inputs: bit-exact under ``jit``, identical
+  under ``vmap`` (the single-device worker simulation), and free of any
+  host-side state.
+* **Error feedback (EF / EF21 style)** — what compression drops is not
+  lost: the residual ``r`` is carried in optimizer state
+  (``opt_state['residual']``, one f32 vector per compressed bucket) and
+  added back before the next compression: ``acc = g + r``,
+  ``sent = S(acc)``, ``r' = acc - sent``.  This is the memory-
+  compensation pattern that keeps top-k training convergent where plain
+  top-k stalls (see tests/test_sparsify.py's quadratic counterexample).
+  The residual is an ordinary pytree leaf: ZeRO-agnostic (it is already
+  per-device local), checkpointable through ``checkpoint/io.py``.
+* **Adaptive density control** — compression makes the *effective*
+  density a measured, drifting quantity.  ``DensityController`` keeps an
+  EMA of each compressed bucket's post-compression density curve (d(1)
+  local, d(n) aggregated — the two points Zen's cost model needs) from
+  the trainer's ``sync/ef_density*`` metrics, and re-runs
+  ``costmodel.choose_scheme`` on the measured profile.  When the
+  recommendation diverges from the live bucket plan the trainer replans
+  (rebuild + recompile) — that is how ``scheme='auto'`` flips dense<->zen
+  per bucket as density drifts during training.
+
+Compression is applied per *bucket* (the fused flat payload of
+``core/buckets.py``), inside the overlap window of the double-buffered
+schedule (``train/schedule.py``): sparsify(i+1) runs while bucket i's
+collective is on the wire.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import costmodel
+
+KINDS = ("none", "topk", "threshold", "randk")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressConfig:
+    """How dense gradient buckets are sparsified before synchronization."""
+
+    kind: str = "none"        # none | topk | threshold | randk
+    # topk/randk: fraction of elements kept.  For threshold it is the
+    # *capacity budget* the sparse buffers are provisioned for (the
+    # overflow counters surface violations — DESIGN.md §2 contract).
+    density: float = 0.01
+    threshold: float = 0.0    # threshold kind: keep |g| >= threshold
+    ef: bool = True           # error-feedback residual memory
+    seed: int = 0             # randk mask stream
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"compress kind must be one of {KINDS}, got {self.kind!r}")
+        if self.kind in ("topk", "randk") and not 0 < self.density <= 1:
+            raise ValueError(
+                f"compress density must be in (0, 1], got {self.density}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.kind != "none"
+
+    def tag(self) -> str:
+        """Round-trippable spec string (the bucket plan's compress tag)."""
+        if not self.enabled:
+            return "none"
+        arg = (self.threshold if self.kind == "threshold" else self.density)
+        return f"{self.kind}:{arg:g}" + ("" if self.ef else ":noef")
+
+    def keep_count(self, size: int) -> int:
+        """Static per-bucket capacity in elements (k for top-k; the
+        provisioning budget for threshold/randk)."""
+        return max(1, min(size, int(math.ceil(size * self.density))))
+
+
+def parse_compress(spec) -> CompressConfig:
+    """Parse ``--compress`` specs: ``topk:0.01``, ``randk:0.05``,
+    ``threshold:1e-3``, with an optional ``:noef`` suffix (EF off), or
+    ``none``.  A CompressConfig passes through unchanged."""
+    if isinstance(spec, CompressConfig):
+        return spec
+    if spec is None:
+        return CompressConfig()
+    parts = str(spec).split(":")
+    kind = parts[0] or "none"
+    if kind == "none":
+        return CompressConfig()
+    ef = True
+    if parts and parts[-1] == "noef":
+        ef = False
+        parts = parts[:-1]
+    if len(parts) != 2:
+        raise ValueError(
+            f"compress spec must look like 'topk:0.01[:noef]', got {spec!r}")
+    val = float(parts[1])
+    if kind == "threshold":
+        return CompressConfig(kind=kind, threshold=val, ef=ef)
+    return CompressConfig(kind=kind, density=val, ef=ef)
+
+
+# ---------------------------------------------------------------------------
+# the sparsifiers (traced; static shapes only)
+# ---------------------------------------------------------------------------
+
+def _keep_mask(cfg: CompressConfig, acc: jnp.ndarray,
+               key: jnp.ndarray | None) -> jnp.ndarray:
+    """Boolean keep-mask over the f32 accumulator ``acc`` [S]."""
+    if cfg.kind == "topk":
+        k = cfg.keep_count(acc.shape[0])
+        _, idx = lax.top_k(jnp.abs(acc), k)
+        return jnp.zeros(acc.shape, bool).at[idx].set(True)
+    if cfg.kind == "threshold":
+        return jnp.abs(acc) >= cfg.threshold
+    if cfg.kind == "randk":
+        assert key is not None
+        return jax.random.uniform(key, acc.shape) < cfg.density
+    raise ValueError(f"not a sparsifier: {cfg.kind!r}")
+
+
+def compress_bucket(
+    cfg: CompressConfig,
+    payload: jnp.ndarray,
+    residual: jnp.ndarray | None,
+    *,
+    key: jnp.ndarray | None = None,
+):
+    """EF-compress one flat bucket payload.
+
+    Args:
+      payload: the bucket's local gradient payload [S] (any float dtype).
+      residual: f32 [S] error-feedback memory, or None when ``cfg.ef`` is
+          off (plain lossy compression).
+      key: PRNG key (randk only), deterministic in (seed, step, bucket).
+
+    Returns ``(sent, new_residual, density)``: the sparsified payload in
+    the input dtype (zeros off the mask — downstream schemes re-encode),
+    the updated residual (None iff ``residual`` was None), and the traced
+    post-compression local density d(1) = nnz / S.
+
+    EF invariant: ``sent + new_residual == payload + residual`` exactly in
+    f32 — compression moves information into the residual, never drops it.
+    The subtraction uses the *dtype-cast* sent values so what is carried
+    forward is exactly what the wire did not deliver.
+    """
+    acc = payload.astype(jnp.float32)
+    if residual is not None:
+        acc = acc + residual
+    mask = _keep_mask(cfg, acc, key)
+    sent = jnp.where(mask, acc, 0.0).astype(payload.dtype)
+    new_residual = None
+    if residual is not None:
+        new_residual = acc - sent.astype(jnp.float32)
+    density = jnp.mean(mask.astype(jnp.float32))
+    return sent, new_residual, density
+
+
+def compress_profile(
+    cfg: CompressConfig, size: int, vw: int = 1
+) -> costmodel.SparsityProfile:
+    """Offline worst-case profile of a compressed bucket: the configured
+    keep-density with no-overlap densification (the adversarial case for
+    Zen's pull) — what ``choose_scheme`` uses before measurements exist."""
+    return costmodel.worst_case_profile(size, cfg.density, vw=vw)
+
+
+def measured_profile(
+    size: int, d1: float, dn: float, n: int, vw: int = 1
+) -> costmodel.SparsityProfile:
+    """Profile from the two measured densification points the runtime
+    reports: d(1) (local, post-compression) and d(n) (post-aggregation).
+    Intermediate i interpolate linearly — only d(1) and d(n) enter the
+    zen/dense volume formulas, so the interior never decides a scheme."""
+    d1 = float(min(max(d1, 0.0), 1.0))
+    dn = float(min(max(dn, d1), 1.0))
+
+    def d(i: int) -> float:
+        if n <= 1:
+            return d1
+        t = (min(max(i, 1), n) - 1) / (n - 1)
+        return d1 + (dn - d1) * t
+
+    return costmodel.SparsityProfile(M=size, d=d, s=lambda k: 1.0, vw=vw)
+
+
+# ---------------------------------------------------------------------------
+# adaptive density control (host-side feedback loop)
+# ---------------------------------------------------------------------------
+
+DENSITY1_KEY = "sync/ef_density1[{key}]"
+DENSITYN_KEY = "sync/ef_densityN[{key}]"
+
+
+class DensityController:
+    """Feed measured post-compression density back into scheme selection.
+
+    The bucket plan's schemes are static (they size buffers and pick
+    collectives at trace time), but the density top-k/threshold actually
+    produces drifts during training — gradients concentrate, thresholds
+    bite differently, EF residuals change the effective distribution.
+    The controller closes the loop from the *host* side:
+
+        stats = train_step(...)            # sync/ef_density* metrics
+        controller.observe(stats)          # EMA update
+        if controller.drifted():           # choose_scheme disagrees
+            profiles = controller.profiles()
+            ...rebuild GradSync / program with profiles...  # recompile
+
+    Replanning recompiles the step, so callers rate-limit it
+    (``--replan-every`` in ``launch/train.py``).  Bucket *boundaries*
+    never depend on schemes or profiles, so keys and residual shapes are
+    stable across replans — optimizer state carries over untouched.
+    """
+
+    def __init__(
+        self,
+        bucket_sizes: dict[str, int],
+        schemes: dict[str, str],
+        n: int,
+        *,
+        ema: float = 0.8,
+        threshold: float = 1.0,
+    ):
+        """``bucket_sizes``/``schemes``: per compressed-bucket key (from
+        ``GradSync.compressed_buckets()``).  ``n`` is the sync world size;
+        ``threshold`` mirrors ``SyncConfig.auto_threshold``."""
+        self.sizes = dict(bucket_sizes)
+        self.current = dict(schemes)
+        self.n = max(n, 2)
+        self.ema = float(ema)
+        self.threshold = float(threshold)
+        self._d1: dict[str, float] = {}
+        self._dn: dict[str, float] = {}
+
+    def observe(self, stats: dict) -> None:
+        """Fold one step's metrics (host floats or 0-d arrays) into the
+        per-bucket density EMAs.  Unknown keys are ignored, so the whole
+        metrics dict can be passed as-is."""
+        for key in self.sizes:
+            for store, pattern in ((self._d1, DENSITY1_KEY),
+                                   (self._dn, DENSITYN_KEY)):
+                v = stats.get(pattern.format(key=key))
+                if v is None:
+                    continue
+                v = float(v)
+                old = store.get(key)
+                store[key] = v if old is None else (
+                    self.ema * old + (1 - self.ema) * v)
+
+    def profiles(self) -> dict[str, costmodel.SparsityProfile]:
+        """Measured profiles for every bucket with observations — the
+        dict to pass straight to ``GradSync(profiles=...)`` on replan."""
+        out = {}
+        for key, size in self.sizes.items():
+            if key in self._d1 and key in self._dn:
+                out[key] = measured_profile(
+                    size, self._d1[key], self._dn[key], self.n)
+        return out
+
+    def schemes(self) -> dict[str, str]:
+        """choose_scheme on the measured profile per bucket; buckets with
+        no observations yet keep their current scheme."""
+        out = dict(self.current)
+        for key, prof in self.profiles().items():
+            out[key] = costmodel.choose_scheme(
+                prof, self.n, threshold=self.threshold)
+        return out
+
+    def drifted(self) -> dict[str, tuple[str, str]]:
+        """``{key: (current, recommended)}`` where they disagree — truthy
+        iff a replan would change at least one bucket's scheme."""
+        rec = self.schemes()
+        return {k: (self.current[k], rec[k])
+                for k in self.current if rec[k] != self.current[k]}
+
+    def rebase(self, schemes: dict[str, str]) -> None:
+        """Record the schemes the freshly-built plan actually resolved
+        (call after a replan so drift is measured against reality, not
+        against the recommendation that triggered it)."""
+        self.current = dict(schemes)

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import buckets as bk
-from repro.core import costmodel, schemes
+from repro.core import costmodel, schemes, sparsify
 from repro.core.schemes import SyncStats, ZenLayout, make_zen_layout
 
 
@@ -60,6 +60,14 @@ class SyncConfig:
     # buckets of at most this many bytes and emit per-bucket sync ops
     # double-buffered.  None = monolithic per-leaf path (bit-exact PR-1).
     bucket_bytes: int | None = None
+    # Error-feedback sparsification of dense buckets (DESIGN.md §8): a
+    # core/sparsify.py spec string — 'topk:0.01', 'randk:0.05',
+    # 'threshold:1e-3', optional ':noef' suffix — or 'none'.  Compressed
+    # buckets are synchronized with a sparse scheme (under 'auto' the
+    # cost model decides per bucket from the post-compression density);
+    # the EF residual lives in optimizer state and must be threaded
+    # through ``GradSync.__call__(grads, residual, step=...)``.
+    compress: str = "none"
 
 
 class GradSync:
@@ -95,6 +103,7 @@ class GradSync:
         self.pod_axis = pod_axis
         self.n_data = n_data
         self.sparse_paths = tuple(sparse_paths)
+        self.compress = sparsify.parse_compress(cfg.compress)
         self._layouts: dict[str, ZenLayout] = {}
         profiles = profiles or {}
 
@@ -115,31 +124,86 @@ class GradSync:
             return costmodel.choose_scheme(
                 prof, max(n_data, 2), threshold=cfg.auto_threshold)
 
+        def resolve_compressed(key: str, size: int) -> str:
+            """Scheme for one EF-compressed dense bucket: 'auto' runs the
+            cost model on the measured profile when one is available
+            (the DensityController feedback loop), else on the configured
+            keep-density's worst case."""
+            if cfg.scheme != "auto":
+                return cfg.scheme
+            prof = profiles.get(key)
+            if prof is None:
+                prof = sparsify.compress_profile(self.compress, size)
+            return costmodel.choose_scheme(
+                prof, max(n_data, 2), threshold=cfg.auto_threshold)
+
         self.plan = bk.make_bucket_plan(
-            grad_shapes, self._is_sparse, cfg.bucket_bytes, resolve_scheme)
+            grad_shapes, self._is_sparse, cfg.bucket_bytes, resolve_scheme,
+            compress=self.compress.tag(),
+            compressed_scheme=resolve_compressed)
         for b in self.plan.buckets:
-            if b.kind != bk.SPARSE or b.scheme != "zen":
+            if b.scheme != "zen":
                 continue
-            slot = b.slots[0]
-            rows = slot.shape[0] if len(slot.shape) >= 1 else 1
-            self._layouts[slot.name] = make_zen_layout(
+            if b.kind == bk.SPARSE:
+                slot = b.slots[0]
+                rows = slot.shape[0] if len(slot.shape) >= 1 else 1
+                budget = cfg.density_budget
+            else:  # compressed dense bucket: flat element-sparse payload
+                rows = b.size
+                budget = self._compressed_budget()
+            self._layouts[b.key] = make_zen_layout(
                 rows, n_data,
-                density_budget=cfg.density_budget, key=cfg.seed,
+                density_budget=budget, key=cfg.seed,
                 k=cfg.k, r1_factor=cfg.r1_factor, r2_ratio=cfg.r2_ratio,
             )
 
     def _is_sparse(self, name: str) -> bool:
         return any(s in name for s in self.sparse_paths)
 
+    def _compressed_budget(self) -> float:
+        """Capacity budget for compressed buckets: 4x the configured
+        keep-density (EF bursts and threshold drift need headroom; the
+        overflow counters surface genuine violations — DESIGN.md §2)."""
+        return min(1.0, 4 * self.compress.density)
+
+    # -- error-feedback residual state ---------------------------------------
+
+    @property
+    def has_compression(self) -> bool:
+        return self.compress.enabled
+
+    def compressed_buckets(self) -> dict[str, int]:
+        """{bucket key: payload element count} for every compressed
+        bucket — the shape contract for residual state and the
+        DensityController."""
+        return {b.key: b.size for b in self.plan.buckets
+                if b.compress != "none"}
+
+    def bucket_schemes(self) -> dict[str, str]:
+        """{bucket key: resolved scheme} for compressed buckets (what the
+        DensityController compares its recommendations against)."""
+        return {b.key: b.scheme for b in self.plan.buckets
+                if b.compress != "none"}
+
+    def init_residual(self) -> dict:
+        """Zero EF residual memory (one f32 vector per compressed bucket;
+        empty when EF is off — plain lossy compression keeps no state)."""
+        if not (self.compress.enabled and self.compress.ef):
+            return {}
+        return {k: jnp.zeros((s,), jnp.float32)
+                for k, s in self.compressed_buckets().items()}
+
     # -- per-bucket sync ------------------------------------------------------
 
     def _encode_bucket(self, bucket: bk.Bucket, payload: jnp.ndarray):
         """Local, collective-free stage (overlappable with the previous
         bucket's wire time).  Zen buckets encode to (indices, values);
-        everything else passes through."""
+        everything else passes through.  For compressed buckets the
+        payload arriving here is already EF-sparsified (the schedule's
+        compress hook runs in the same pipeline slot)."""
         if bucket.scheme == "zen":
             enc = schemes.zen_encode(
-                payload, layout=self._layouts[bucket.slots[0].name],
+                payload, layout=self._layouts[bucket.key],
                 backend=self.cfg.backend)
             return (payload, enc)
         return (payload,)
@@ -147,16 +211,21 @@ class GradSync:
     def _commit_bucket(
         self, bucket: bk.Bucket, enc
     ) -> tuple[jnp.ndarray, SyncStats]:
-        """Collective + decode-apply stage for one bucket."""
+        """Collective + decode-apply stage for one bucket.  Dispatch is by
+        *scheme*: an uncompressed dense bucket is a fused psum; a
+        compressed dense bucket goes through the sparse schemes on its
+        flat (element-sparse) payload exactly like a row-sparse leaf."""
         cfg, ax, n = self.cfg, self.data_axis, self.n_data
         g = enc[0]
-        if bucket.kind == bk.DENSE:
+        if bucket.kind == bk.DENSE and bucket.scheme == "dense":
             out = lax.psum(g, ax) / n
             words = jnp.float32(2 * (n - 1) / n) * g.size
             st = SyncStats(sent_words=words, overflow=jnp.int32(0))
         else:
-            name = bucket.slots[0].name
-            cap = max(64, int(g.shape[0] * cfg.density_budget))
+            name = bucket.key
+            capd = (self._compressed_budget() if bucket.compress != "none"
+                    else cfg.density_budget)
+            cap = max(64, int(g.shape[0] * capd))
             if bucket.scheme == "zen":
                 out, st = schemes.zen_commit(
                     enc[1], g, axis=ax, layout=self._layouts[name],
@@ -186,18 +255,69 @@ class GradSync:
 
     # -- pytree sync ----------------------------------------------------------
 
-    def __call__(self, grads: Any) -> tuple[Any, dict[str, jnp.ndarray]]:
-        """Synchronize grads (mean over data[, pod]); returns (grads, stats)."""
+    def _compress_hook(self, residual, step, new_res: dict, extra: dict):
+        """Build the schedule's compress stage.  Sparsified payloads flow
+        on; residual updates and measured local densities d(1) are
+        recorded in the caller's ``new_res`` / ``extra`` side channels."""
+        ccfg = self.compress
+        step = jnp.int32(0) if step is None else step
+
+        def hook(bucket: bk.Bucket, payload):
+            if bucket.compress == "none":
+                return payload
+            key = None
+            if ccfg.kind == "randk":
+                key = jax.random.fold_in(jax.random.fold_in(
+                    jax.random.PRNGKey(ccfg.seed), bucket.bid), step)
+            r = residual[bucket.key] if ccfg.ef else None
+            sent, r_new, d1 = sparsify.compress_bucket(
+                ccfg, payload, r, key=key)
+            if r_new is not None:
+                new_res[bucket.key] = r_new
+            extra[sparsify.DENSITY1_KEY.format(key=bucket.key)] = d1
+            return sent
+
+        return hook
+
+    def __call__(self, grads: Any, residual: dict | None = None, *,
+                 step: jnp.ndarray | None = None):
+        """Synchronize grads (mean over data[, pod]).
+
+        Without compression: ``gs(grads) -> (synced, stats)``.  With
+        compression, the EF residual state must be threaded through:
+        ``gs(grads, residual, step=t) -> (synced, new_residual, stats)``
+        (``step`` feeds randk's deterministic mask stream; topk/threshold
+        ignore it).  Passing ``residual`` always selects the 3-tuple form
+        so callers keep one code path per configuration.
+        """
         # deferred: core must not import the train layer at module scope
         from repro.train import schedule
 
+        if self.compress.enabled and self.compress.ef and residual is None:
+            raise ValueError(
+                "EF compression keeps residual state: call "
+                "gs(grads, residual) with gs.init_residual() (or the "
+                "optimizer-state copy) — a fresh zero residual every step "
+                "would silently disable error feedback")
+        new_res: dict = {}
+        extra: dict = {}
+        compress_fn = (self._compress_hook(residual, step, new_res, extra)
+                       if self.compress.enabled else None)
         flat, treedef = jax.tree_util.tree_flatten(grads)
         payloads = [bk.gather_bucket(b, flat) for b in self.plan.buckets]
         outs, per_bucket = schedule.run_schedule(
             self.plan.buckets, payloads,
-            self._encode_bucket, self._commit_bucket)
+            self._encode_bucket, self._commit_bucket, compress=compress_fn)
         synced_flat = list(flat)
         for b, out in zip(self.plan.buckets, outs):
+            if b.compress != "none":
+                # measured post-aggregation density d(n): the second point
+                # of the DensityController's feedback profile
+                extra[sparsify.DENSITYN_KEY.format(key=b.key)] = jnp.mean(
+                    (out != 0).astype(jnp.float32))
             bk.scatter_bucket(b, out, synced_flat)
         synced = jax.tree_util.tree_unflatten(treedef, synced_flat)
-        return synced, bk.reduce_stats(self.plan, per_bucket)
+        stats = bk.reduce_stats(self.plan, per_bucket, extra)
+        if residual is None:
+            return synced, stats
+        return synced, new_res, stats

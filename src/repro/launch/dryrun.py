@@ -29,13 +29,16 @@ from repro.train.steps import TrainerConfig  # noqa: E402
 def dryrun_combo(arch: str, shape: str, multi_pod: bool,
                  sync_scheme: str = "zen", pad_heads: bool = False,
                  fused_attn: bool = False, moe_a2a: bool = False,
-                 bucket_bytes: int | None = None) -> dict:
+                 bucket_bytes: int | None = None,
+                 compress: str = "none") -> dict:
     """Lower + compile one (arch, input-shape, mesh) combination.
 
     Returns the record for EXPERIMENTS.md §Dry-run / §Roofline.
     ``pad_heads`` / ``fused_attn`` are the §Perf optimization knobs;
     ``bucket_bytes`` compiles the bucketed overlap schedule (DESIGN.md §7)
-    so its collective count/bytes land in the record.
+    so its collective count/bytes land in the record; ``compress``
+    compiles the EF sparsification stack (DESIGN.md §8, e.g. 'topk:0.01')
+    so induced-sparsity wire volumes are measurable on the production mesh.
     """
     from repro.core.zen import SyncConfig
 
@@ -44,14 +47,16 @@ def dryrun_combo(arch: str, shape: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     prog = build_program(cfg, mesh, TrainerConfig(
-        sync=SyncConfig(scheme=sync_scheme, bucket_bytes=bucket_bytes)),
+        sync=SyncConfig(scheme=sync_scheme, bucket_bytes=bucket_bytes,
+                        compress=compress)),
         pad_heads=pad_heads, moe_a2a=moe_a2a)
     mode = spec["mode"]
 
     if mode == "train":
         attach_train(prog, spec["seq_len"], spec["global_batch"])
         ospecs_abs = st.abstract_opt_state(prog.tcfg, prog.param_shapes,
-                                           prog.model.ctx, prog.param_specs)
+                                           prog.model.ctx, prog.param_specs,
+                                           gradsync=prog.gradsync)
         args = (prog.param_shapes, ospecs_abs, prog.batch_specs["shapes"])
         step = prog.train_step
     elif mode == "prefill":
@@ -120,6 +125,11 @@ def main():
                     help="fuse dense grads into buckets of at most this "
                          "many bytes and emit the double-buffered overlap "
                          "schedule (DESIGN.md §7); default: monolithic")
+    ap.add_argument("--compress", default="none",
+                    help="EF-sparsify dense buckets before sync "
+                         "(DESIGN.md §8), e.g. 'topk:0.01', 'randk:0.05', "
+                         "'threshold:1e-3', ':noef' suffix disables error "
+                         "feedback; default: none")
     ap.add_argument("--pad-heads", action="store_true",
                     help="§Perf: pad+shard replicated attention heads")
     ap.add_argument("--fused-attn", action="store_true",
@@ -154,7 +164,8 @@ def main():
                                        pad_heads=args.pad_heads,
                                        fused_attn=args.fused_attn,
                                        moe_a2a=args.moe_a2a,
-                                       bucket_bytes=args.bucket_bytes)
+                                       bucket_bytes=args.bucket_bytes,
+                                       compress=args.compress)
                     fp.write_text(json.dumps(rec, indent=1))
                     print(f"OK   {tag}: compile={rec['compile_s']}s "
                           f"flops/dev={rec['flops_per_device']:.3e} "

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint.io import save
 from repro.configs import ALL_ARCHS, get_config
+from repro.core.sparsify import DensityController
 from repro.core.zen import SyncConfig
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_mesh
@@ -46,6 +47,17 @@ def main():
     ap.add_argument("--bucket-bytes", type=int, default=None,
                     help="bucketed overlap schedule: fuse dense grads into "
                          "buckets of at most this many bytes (DESIGN.md §7)")
+    ap.add_argument("--compress", default="none",
+                    help="EF-sparsify dense gradient buckets before sync "
+                         "(DESIGN.md §8): 'topk:0.01', 'randk:0.05', "
+                         "'threshold:1e-3'; append ':noef' to drop the "
+                         "error-feedback residual (lossy)")
+    ap.add_argument("--replan-every", type=int, default=0,
+                    help="adaptive density control: every N steps compare "
+                         "choose_scheme on the MEASURED post-compression "
+                         "densities against the live plan and rebuild "
+                         "(recompile) when a bucket's dense<->zen choice "
+                         "flips; 0 = static plan")
     ap.add_argument("--no-zero1", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
@@ -64,7 +76,8 @@ def main():
         opt=OptConfig(lr=args.lr),
         sync=SyncConfig(scheme=args.sync,
                         density_budget=args.density_budget,
-                        bucket_bytes=args.bucket_bytes),
+                        bucket_bytes=args.bucket_bytes,
+                        compress=args.compress),
         zero1=not args.no_zero1)
     prog = build_program(cfg, mesh, tcfg)
     attach_train(prog, args.seq_len, args.global_batch)
@@ -72,7 +85,17 @@ def main():
     opt = prog.init_opt(params)
     n_params = sum(p.size for p in jax.tree.leaves(params))
     print(f"arch={cfg.name} params={n_params / 1e6:.1f}M mesh={args.mesh} "
-          f"sync={args.sync}")
+          f"sync={args.sync} compress={args.compress}")
+
+    # adaptive density control (DESIGN.md §8): measured post-compression
+    # densities feed choose_scheme; a dense<->zen flip triggers a replan
+    controller = None
+    if args.replan_every and prog.gradsync.has_compression:
+        controller = DensityController(
+            prog.gradsync.compressed_buckets(),
+            prog.gradsync.bucket_schemes(),
+            n=prog.model.ctx.dp,
+            threshold=tcfg.sync.auto_threshold)
 
     data = iter(SyntheticLM(cfg, DataConfig(
         seq_len=args.seq_len, batch=args.global_batch, seed=args.seed)))
@@ -90,6 +113,19 @@ def main():
                   f"tok/s={tokens_done / dt:,.0f} "
                   f"sparse_words={float(m['sync/sparse_sent_words']):,.0f} "
                   f"overflow={int(float(m['sync/overflow']))}")
+        if controller is not None and step % args.log_every == 0:
+            controller.observe(
+                {k: float(v) for k, v in m.items()
+                 if k.startswith("sync/ef_density")})
+        if (controller is not None and step
+                and step % args.replan_every == 0):
+            drift = controller.drifted()
+            if drift:
+                print(f"replan @ step {step}: density drift flips "
+                      f"{drift} — rebuilding plan")
+                attach_train(prog, args.seq_len, args.global_batch,
+                             sparsity_profiles=controller.profiles())
+                controller.rebase(prog.gradsync.bucket_schemes())
         if args.ckpt_dir and args.ckpt_every and \
                 step and step % args.ckpt_every == 0:
             save(Path(args.ckpt_dir) / f"step_{step}",

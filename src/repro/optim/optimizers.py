@@ -57,6 +57,18 @@ INITS = {"adamw": adamw_init, "sgd": sgd_init}
 UPDATES = {"adamw": adamw_update, "sgd": sgd_update}
 
 
+def ef_residual_init(struct):
+    """Zero error-feedback residual memory from its ShapeDtypeStruct tree.
+
+    The EF residual (core/sparsify.py, DESIGN.md §8) is optimizer state —
+    initialized here, checkpointed with the moments, threaded through
+    every update — but unlike the moments it is per-device and never
+    ZeRO-chunked: compression consumes the *local* bucket payload before
+    the ZeRO-1 update partitions anything, so chunking it would hand each
+    rank the wrong memory."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), struct)
+
+
 def global_norm(tree) -> jnp.ndarray:
     leaves = jax.tree.leaves(tree)
     return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))

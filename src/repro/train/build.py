@@ -47,6 +47,13 @@ class Program:
     decode_step: Any = None
     batch_specs: Any = None
     cache_specs: Any = None
+    # the trainer's GradSync (set by attach_train): owns the bucket plan,
+    # compressor tags, and the EF-residual shape contract that the
+    # optimizer state must match (DESIGN.md §8)
+    gradsync: Any = None
+    # measured sparsity profiles used at the last (re)plan — the
+    # DensityController feedback loop writes here via attach_train
+    sparsity_profiles: Any = None
 
     def init_params(self, seed: int = 0):
         shardings = jax.tree.map(
@@ -70,13 +77,19 @@ class Program:
         return jax.tree_util.tree_map_with_path(leaf, shapes)
 
     def init_opt(self, params):
-        ospecs = st.opt_pspecs(self.tcfg, self.param_specs, self.model.ctx)
+        if self.gradsync is None and self.tcfg.sync.compress != "none":
+            raise ValueError(
+                "EF compression sizes the residual from the bucket plan: "
+                "call attach_train(prog, ...) before init_opt")
+        ospecs = st.opt_pspecs(self.tcfg, self.param_specs, self.model.ctx,
+                               gradsync=self.gradsync)
         shardings = jax.tree.map(
             lambda s: NamedSharding(self.mesh, s), ospecs,
             is_leaf=lambda x: isinstance(x, P))
         fn = jax.jit(functools.partial(st.init_opt_state, self.tcfg,
                                        ctx=self.model.ctx,
-                                       param_specs=self.param_specs),
+                                       param_specs=self.param_specs,
+                                       gradsync=self.gradsync),
                      out_shardings=shardings)
         return fn(params)
 
@@ -97,16 +110,28 @@ def build_program(cfg: ArchConfig, mesh: Mesh,
                    param_shapes=shapes, param_specs=specs)
 
 
-def attach_train(prog: Program, seq_len: int, global_batch: int) -> None:
+def attach_train(prog: Program, seq_len: int, global_batch: int,
+                 sparsity_profiles=None) -> None:
     """Build prog.train_step: (params, opt_state, batch) -> (params, opt,
-    metrics)."""
+    metrics).
+
+    ``sparsity_profiles`` ({bucket-key/leaf-path: SparsityProfile}) feeds
+    measured density curves into the per-bucket 'auto' scheme choice —
+    the DensityController replan path re-calls attach_train with the
+    profiles it has learned (bucket boundaries and residual shapes are
+    profile-independent, so existing params/opt_state stay valid)."""
     model, mesh, tcfg = prog.model, prog.mesh, prog.tcfg
     ctx = model.ctx
     n_shards = ctx.dp * (ctx.pods if ctx.pod_axis else 1)
     bshapes = make_batch_specs(prog.cfg, seq_len, global_batch, "train")
     bspecs = st.batch_pspecs(bshapes, ctx, n_shards)
-    ospecs = st.opt_pspecs(tcfg, prog.param_specs, ctx)
-    step_fn = st.make_train_step(model, tcfg, prog.param_specs)
+    prog.sparsity_profiles = sparsity_profiles
+    prog.gradsync = st.make_gradsync(model, tcfg, prog.param_specs,
+                                     prog.param_shapes, sparsity_profiles)
+    ospecs = st.opt_pspecs(tcfg, prog.param_specs, ctx,
+                           gradsync=prog.gradsync)
+    step_fn = st.make_train_step(model, tcfg, prog.param_specs,
+                                 gradsync=prog.gradsync)
     metric_specs = P()
     mapped = _shard_map(
         step_fn, mesh=mesh,

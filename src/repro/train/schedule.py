@@ -53,8 +53,17 @@ def run_schedule(
     payloads: Sequence[Any],
     encode: Callable[[Bucket, Any], Any],
     commit: Callable[[Bucket, Any], tuple[Any, SyncStats]],
+    compress: Callable[[Bucket, Any], Any] | None = None,
 ) -> tuple[list[Any], list[SyncStats]]:
     """Emit the double-buffered per-bucket sync pipeline.
+
+    ``compress``, when given, is the error-feedback sparsification stage
+    (core/sparsify.py): ``compress(bucket, payload) -> payload'``, applied
+    immediately before ``encode`` *inside the same pipeline slot* — so
+    bucket i+1 sparsifies AND encodes while bucket i's collective is on
+    the wire, and the fence covers the whole compress+encode prefetch.
+    Residual-memory updates are the caller's side channel (GradSync keeps
+    them per bucket); the schedule only sees the transformed payload.
 
     Returns (synced payloads, per-bucket SyncStats), both in bucket order.
     """
@@ -63,9 +72,16 @@ def run_schedule(
     stats: list[SyncStats] = [None] * nb
     if nb == 0:
         return outs, stats
-    enc = encode(buckets[0], payloads[0])
+
+    def prefetch(i: int):
+        p = payloads[i]
+        if compress is not None:
+            p = compress(buckets[i], p)
+        return encode(buckets[i], p)
+
+    enc = prefetch(0)
     for i, b in enumerate(buckets):
-        nxt = encode(buckets[i + 1], payloads[i + 1]) if i + 1 < nb else None
+        nxt = prefetch(i + 1) if i + 1 < nb else None
         if nxt is not None:
             # value-identity fence: bucket i+1's encode must be materialized
             # before bucket i's commit results are consumed (double buffer).

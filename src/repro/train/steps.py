@@ -34,7 +34,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.zen import GradSync, SyncConfig
 from repro.models.common import ShardCtx
 from repro.models.model import Model
-from repro.optim.optimizers import INITS, UPDATES, OptConfig
+from repro.optim.optimizers import INITS, UPDATES, OptConfig, ef_residual_init
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,10 +95,26 @@ def _shard_divisor(spec: P, ctx: ShardCtx) -> int:
     return div
 
 
-def init_opt_state(tcfg: TrainerConfig, params, ctx: ShardCtx, param_specs):
+def _device_world(ctx: ShardCtx) -> int:
+    """Total devices in the mesh — the EF residual is fully per-device
+    (each (pod, data, model) rank keeps its own compressed-bucket
+    memory), so its global dim0 is the whole device count."""
+    return ctx.dp * ctx.tp * (ctx.pods if ctx.pod_axis else 1)
+
+
+def residual_axes(ctx: ShardCtx) -> tuple:
+    """Mesh axes, in mesh order, that shard the residual's dim0."""
+    head = (ctx.pod_axis,) if ctx.pod_axis else ()
+    return head + (ctx.dp_axis, ctx.tp_axis)
+
+
+def init_opt_state(tcfg: TrainerConfig, params, ctx: ShardCtx, param_specs,
+                   gradsync=None):
     """Global optimizer state.  ZeRO-1: per-leaf moments shaped
     [world, chunk] where chunk covers the LOCAL (per-device) param shard
-    (dim0 sharded over the zero axes)."""
+    (dim0 sharded over the zero axes).  When ``gradsync`` compresses with
+    error feedback, a ``residual`` entry carries one zero f32 vector per
+    compressed bucket and device (DESIGN.md §8)."""
     world = _zero_world(ctx)
     init = INITS[tcfg.opt.kind]
 
@@ -110,10 +126,15 @@ def init_opt_state(tcfg: TrainerConfig, params, ctx: ShardCtx, param_specs):
         return init(jnp.zeros((world, c), jnp.float32))
 
     state = jax.tree.map(leaf, params, param_specs)
-    return {"leaves": state, "step": jnp.zeros((), jnp.int32)}
+    out = {"leaves": state, "step": jnp.zeros((), jnp.int32)}
+    res = _residual_struct(gradsync, ctx)
+    if res is not None:
+        out["residual"] = ef_residual_init(res)
+    return out
 
 
-def opt_pspecs(tcfg: TrainerConfig, param_specs, ctx: ShardCtx):
+def opt_pspecs(tcfg: TrainerConfig, param_specs, ctx: ShardCtx,
+               gradsync=None):
     zaxes = zero_axes(ctx)
 
     def leaf(spec: P):
@@ -123,11 +144,15 @@ def opt_pspecs(tcfg: TrainerConfig, param_specs, ctx: ShardCtx):
 
     leaves = jax.tree.map(leaf, param_specs,
                           is_leaf=lambda x: isinstance(x, P))
-    return {"leaves": leaves, "step": P()}
+    out = {"leaves": leaves, "step": P()}
+    res = _residual_struct(gradsync, ctx)
+    if res is not None:
+        out["residual"] = {k: P(residual_axes(ctx)) for k in res}
+    return out
 
 
 def abstract_opt_state(tcfg: TrainerConfig, param_shapes, ctx: ShardCtx,
-                       param_specs):
+                       param_specs, gradsync=None):
     world = _zero_world(ctx)
     names = list(INITS[tcfg.opt.kind](jnp.zeros((1,), jnp.float32)))
 
@@ -139,8 +164,25 @@ def abstract_opt_state(tcfg: TrainerConfig, param_shapes, ctx: ShardCtx,
                     for k in names}
         return {k: jax.ShapeDtypeStruct(p.shape, jnp.float32) for k in names}
 
-    return {"leaves": jax.tree.map(leaf, param_shapes, param_specs),
-            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    out = {"leaves": jax.tree.map(leaf, param_shapes, param_specs),
+           "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    res = _residual_struct(gradsync, ctx)
+    if res is not None:
+        out["residual"] = res
+    return out
+
+
+def _residual_struct(gradsync, ctx: ShardCtx):
+    """Global ShapeDtypeStructs of the EF residual state, or None when the
+    sync config keeps no residual (no compression, or ``:noef``)."""
+    if gradsync is None or not gradsync.has_compression:
+        return None
+    sizes = {k: v.shape[0] for k, v in gradsync.init_residual().items()}
+    if not sizes:
+        return None
+    n_dev = _device_world(ctx)
+    return {k: jax.ShapeDtypeStruct((n_dev * s,), jnp.float32)
+            for k, s in sizes.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -166,13 +208,31 @@ def local_param_shapes(param_shapes, param_specs, ctx: ShardCtx):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def make_gradsync(model: Model, tcfg: TrainerConfig, param_specs,
+                  param_shapes=None, sparsity_profiles=None) -> GradSync:
+    """Build the trainer's GradSync OFFLINE (hash layouts, bucket plan,
+    compressor tags) from the local (per-device) grad shapes — grads
+    match param shards inside shard_map."""
+    ctx = model.ctx
+    if param_shapes is None:
+        param_shapes = model.abstract()[0]
+    grad_shapes = local_param_shapes(param_shapes, param_specs, ctx)
+    return GradSync(
+        tcfg.sync, list(model.sparse_paths), grad_shapes, ctx.dp,
+        data_axis=ctx.dp_axis, pod_axis=ctx.pod_axis,
+        profiles=sparsity_profiles)
+
+
 def make_train_step(model: Model, tcfg: TrainerConfig, param_specs,
-                    param_shapes=None, sparsity_profiles=None):
+                    param_shapes=None, sparsity_profiles=None,
+                    gradsync: GradSync | None = None):
     """Returns the per-device step fn (to be wrapped in shard_map).
 
     ``sparsity_profiles`` (optional ``{leaf-path: SparsityProfile}``) feeds
     measured densification/skew curves into GradSync's per-tensor 'auto'
-    scheme choice (otherwise the worst-case budget profile decides)."""
+    scheme choice (otherwise the worst-case budget profile decides).
+    Callers that also build the optimizer state pass the ``gradsync`` they
+    got from ``make_gradsync`` so the residual shape contract is shared."""
     ctx = model.ctx
     world = _zero_world(ctx)
     zaxes = zero_axes(ctx)
@@ -181,16 +241,9 @@ def make_train_step(model: Model, tcfg: TrainerConfig, param_specs,
     spec_leaves = jax.tree.leaves(
         param_specs, is_leaf=lambda x: isinstance(x, P))
 
-    # GradSync is precomputed OFFLINE (hash layouts, the bucket plan), from
-    # the local (per-device) grad shapes — grads match param shards inside
-    # shard_map.
-    if param_shapes is None:
-        param_shapes = model.abstract()[0]
-    grad_shapes = local_param_shapes(param_shapes, param_specs, ctx)
-    gradsync = GradSync(
-        tcfg.sync, list(model.sparse_paths), grad_shapes, ctx.dp,
-        data_axis=ctx.dp_axis, pod_axis=ctx.pod_axis,
-        profiles=sparsity_profiles)
+    if gradsync is None:
+        gradsync = make_gradsync(model, tcfg, param_specs, param_shapes,
+                                 sparsity_profiles)
 
     def step_fn(params, opt_state, batch):
         (loss, metrics), grads = jax.value_and_grad(
@@ -206,7 +259,15 @@ def make_train_step(model: Model, tcfg: TrainerConfig, param_specs,
             grads = jax.tree.unflatten(treedef, flat_g)
 
         # --- 3. data(+pod)-axis sync: bucketed, overlap-scheduled -----------
-        grads, sync_stats = gradsync(grads)
+        # (with EF compression the residual memory rides in opt_state and
+        # is threaded through the sync — DESIGN.md §8)
+        new_residual = None
+        if gradsync.has_compression:
+            grads, new_residual, sync_stats = gradsync(
+                grads, opt_state.get("residual", {}),
+                step=opt_state["step"])
+        else:
+            grads, sync_stats = gradsync(grads)
         metrics = {**metrics, **sync_stats}
 
         # --- grad clip (global norm; sharded leaves psum over model) --------
@@ -257,6 +318,10 @@ def make_train_step(model: Model, tcfg: TrainerConfig, param_specs,
             new_params, new_state_leaves = _zip_update(
                 params, grads, opt_state["leaves"], leaf_update_full)
             new_state = {"leaves": new_state_leaves, "step": step + 1}
+
+        if "residual" in opt_state:
+            # EF memory: per-device state, untouched by ZeRO chunking
+            new_state["residual"] = new_residual
 
         # report metrics averaged over data
         metrics = jax.tree.map(

@@ -30,7 +30,7 @@ PRELUDE = textwrap.dedent("""
     from repro.core.zen import SyncConfig
     from repro.data.pipeline import SyntheticLM, DataConfig
 
-    def run(arch, mesh_shape, scheme, steps=2):
+    def run(arch, mesh_shape, scheme, steps=2, compress="none"):
         # capacity_factor high enough that no tokens drop: MoE drop
         # boundaries legitimately depend on per-shard capacity, which
         # would otherwise differ across mesh shapes
@@ -38,7 +38,10 @@ PRELUDE = textwrap.dedent("""
                                   dtype=jnp.float32, capacity_factor=4.0)
         mesh = make_mesh(mesh_shape, ("data", "model"))
         prog = build_program(cfg, mesh,
-                             TrainerConfig(sync=SyncConfig(scheme=scheme)))
+                             TrainerConfig(sync=SyncConfig(
+                                 scheme=scheme, compress=compress,
+                                 bucket_bytes=(1 << 15)
+                                 if compress != "none" else None)))
         attach_train(prog, seq_len=32, global_batch=4)
         params = prog.init_params(0)
         opt = prog.init_opt(params)
@@ -48,7 +51,8 @@ PRELUDE = textwrap.dedent("""
         for _ in range(steps):
             params, opt, m = prog.train_step(params, opt, batch)
             losses.append(float(m["loss"]))
-        return losses, float(m.get("sync/sparse_sent_words", 0.0))
+        return losses, {k: float(v) for k, v in m.items()
+                        if k.startswith("sync/")}
 """)
 
 WORKER_CROSS_MESH = PRELUDE + textwrap.dedent("""
@@ -64,12 +68,29 @@ WORKER_CROSS_MESH = PRELUDE + textwrap.dedent("""
 WORKER_SYNC = PRELUDE + textwrap.dedent("""
     # Zen == dense end-to-end at dp=4 (f32 exact-ish)
     for arch in ["qwen2-0.5b"]:
-        zen, zen_words = run(arch, (4, 2), "zen", steps=3)
-        dense, _ = run(arch, (4, 2), "dense", steps=3)
+        zen, zen_m = run(arch, (4, 2), "zen", steps=3)
+        dense, dense_m = run(arch, (4, 2), "dense", steps=3)
         for a, b_ in zip(zen, dense):
             assert abs(a - b_) < 1e-3, (zen, dense)
+        zen_words = zen_m["sync/sparse_sent_words"]
         assert zen_words > 0, "zen reported no sparse traffic at dp=4"
         print("ZEN==DENSE", arch, zen, dense, zen_words)
+
+    # EF top-k compression end-to-end on the mesh (DESIGN.md §8): the
+    # sparsified run must train (finite, broadly tracking dense over a
+    # few steps), sync its compressed buckets with a sparse scheme
+    # chosen by 'auto', and cut the dense-bucket wire volume hard
+    comp, comp_m = run("qwen2-0.5b", (4, 2), "auto", steps=3,
+                       compress="topk:0.02")
+    assert all(np.isfinite(x) for x in comp), comp
+    # step-0 loss is pre-update (same seed, same params): must match dense
+    assert abs(comp[0] - dense[0]) < 1e-3, (comp[0], dense[0])
+    assert comp_m.get("sync/compressed_buckets", 0) > 0, comp_m
+    comp_wire = comp_m["sync/sparse_sent_words"] + comp_m["sync/dense_words"]
+    dense_wire = dense_m["sync/sparse_sent_words"] + dense_m["sync/dense_words"]
+    assert comp_wire < 0.25 * dense_wire, (comp_wire, dense_wire)
+    assert comp_m["sync/overflow"] == 0, comp_m
+    print("EF_COMPRESS_ON_MESH", comp, comp_wire, dense_wire)
 
     # MoE token-sharded a2a dispatch == replicated dispatch (§Perf B1)
     def run_moe(a2a):
@@ -109,8 +130,11 @@ def _run_worker(script: str) -> None:
     reason="pre-existing model-layer TP inconsistency: first-step loss "
            "differs between (1,1) and (2,4) meshes for EVERY sync scheme "
            "(dense included), so the mismatch is in the TP forward/init "
-           "path, not gradient synchronization. Tracked for a model-zoo PR.",
-    strict=False)
+           "path, not gradient synchronization. Tracked in ROADMAP.md "
+           "'Open items' for a model-zoo PR.  strict=True: if a refactor "
+           "fixes the forward path, this must FAIL so the xfail (and the "
+           "ROADMAP entry) get removed instead of rotting.",
+    strict=True)
 def test_cross_mesh_consistency():
     _run_worker(WORKER_CROSS_MESH)
 
