@@ -7,10 +7,20 @@ PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 # formatter and reflowing it would bury real diffs)
 FORMATTED := src/repro/train/schedule.py benchmarks/check_regression.py
 
-.PHONY: test lint check-bytecode bench-smoke bench-gate ci
+.PHONY: test test-crossmesh lint check-bytecode bench-smoke bench-gate ci
 
 test:
 	$(PY) -m pytest -x -q
+
+# full cross-mesh parity matrix (DESIGN.md §9): {attention, MoE, SSM} x
+# meshes {(1,1),(1,8)/(8,1),(2,4),(4,2)} x schemes {dense, zen, auto,
+# topk-EF} on 8 host devices.  Tier-1 always runs the fast 2-config
+# subset (test_cross_mesh_consistency); the CI multidevice job runs this
+# full matrix.  The workers force their own
+# --xla_force_host_platform_device_count=8.
+test-crossmesh:
+	REPRO_CROSSMESH=full $(PY) -m pytest -x -q \
+		tests/test_multidevice.py -k "cross_mesh_parity_matrix"
 
 # fail if any python bytecode is tracked by git (a PR-2 leak committed 84
 # __pycache__ files; .gitignore prevents new ones, this gate enforces it)

@@ -25,6 +25,7 @@ from repro.core.sparsify import DensityController
 from repro.core.zen import SyncConfig
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_mesh
+from repro.models.common import make_ctx
 from repro.optim.optimizers import OptConfig
 from repro.train.build import attach_train, build_program
 from repro.train.steps import TrainerConfig
@@ -65,13 +66,17 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    dims = [int(x) for x in args.mesh.split("x")]
-    axes = ("pod", "data", "model")[-len(dims):]
-    mesh = make_mesh(tuple(dims), axes)
-
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+
+    dims = [int(x) for x in args.mesh.split("x")]
+    axes = ("pod", "data", "model")[-len(dims):]
+    # eager §9 validation: reject a tp that does not divide the config
+    # (clear error naming the config) BEFORE jax allocates the mesh
+    pods, dp, tp = ([1] * (3 - len(dims)) + dims)
+    make_ctx(cfg, tp, dp, pods)
+    mesh = make_mesh(tuple(dims), axes)
     tcfg = TrainerConfig(
         opt=OptConfig(lr=args.lr),
         sync=SyncConfig(scheme=args.sync,

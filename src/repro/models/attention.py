@@ -11,7 +11,8 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ArchConfig, ParamBuilder, ShardCtx
+from repro.models.common import (ArchConfig, ParamBuilder, ShardCtx,
+                                 zero_cols_from, zero_rows_from)
 from repro.models import layers as L
 
 
@@ -26,22 +27,12 @@ def _H(cfg: ArchConfig, ctx: ShardCtx) -> int:
 
 def _zero_pad_cols(sub, name: str, start_col: int):
     """Zero the padded-head columns so the init function IS the spec arch."""
-    key = f"{name}_w"
-    w = sub.params.get(key)
-    if w is None or sub.abstract or start_col >= w.shape[-1]:
-        return
-    sub.params[key] = w.at[..., start_col:].set(0)
-    bkey = f"{name}_b"
-    if bkey in sub.params and not sub.abstract:
-        sub.params[bkey] = sub.params[bkey].at[..., start_col:].set(0)
+    zero_cols_from(sub, f"{name}_w", start_col)
+    zero_cols_from(sub, f"{name}_b", start_col)
 
 
 def _zero_pad_rows(sub, name: str, start_row: int):
-    key = f"{name}_w"
-    w = sub.params.get(key)
-    if w is None or sub.abstract or start_row >= w.shape[0]:
-        return
-    sub.params[key] = w.at[start_row:, :].set(0)
+    zero_rows_from(sub, f"{name}_w", start_row)
 
 
 def init_gqa(b: ParamBuilder, name: str, cfg: ArchConfig, ctx: ShardCtx,

@@ -22,12 +22,18 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
+
+# Vocab is always padded to a multiple of this, independent of the mesh
+# (DESIGN.md §9): parameter SHAPES must never depend on tp.  make_ctx
+# asserts vocab_padded % tp == 0 instead of growing the pad.
+VOCAB_PAD = 128
 
 
 def pad_to(x: int, m: int) -> int:
@@ -97,8 +103,13 @@ class ArchConfig:
     def ssm_heads(self) -> int:
         return self.d_inner // self.ssm_head_dim
 
-    def vocab_padded(self, tp: int) -> int:
-        return pad_to(self.vocab, max(128, tp))
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded to a fixed multiple of ``VOCAB_PAD`` — deliberately
+        NOT a function of the mesh, so the embedding / LM-head shapes (and
+        therefore the init key→param mapping) are identical on every mesh.
+        ``make_ctx`` asserts divisibility by tp instead."""
+        return pad_to(self.vocab, VOCAB_PAD)
 
     def n_params(self) -> int:
         """Approximate parameter count (for roofline MODEL_FLOPS)."""
@@ -171,7 +182,28 @@ class ArchConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ShardCtx:
-    """Mesh axes + per-family sharding decisions, fixed at build time."""
+    """Mesh axes + per-family sharding decisions, fixed at build time.
+
+    Mesh-invariance contract (DESIGN.md §9): every layer computes *global*
+    semantics — the mesh only chooses the layout.  Concretely:
+
+      * global parameter shapes, dtypes, and pytree paths are identical for
+        every (tp, dp, pods) — only the ``PartitionSpec`` trees differ
+        (``assert_mesh_invariant_params`` enforces this on every build);
+      * each leaf's init key is a pure function of (root key, leaf path)
+        — see ``ParamBuilder`` — and random bits are sharding-invariant
+        (``jax_threefry_partitionable``, enabled in ``repro/__init__``),
+        so ``same key -> bitwise-same global param pytree`` on any mesh;
+      * forward math is the same global function on every mesh: sharded
+        reductions (psum / pmax over ``model``) reconstruct exactly the
+        full-dim quantity, never a per-shard approximation;
+      * divisibility preconditions are validated eagerly by ``make_ctx``
+        with errors naming the config, never absorbed by growing shapes.
+
+    The one documented exception is ``h_pad`` (opt-in ``pad_heads=True``):
+    padding q-heads up to a tp multiple changes global shapes by design,
+    trading bit-parity across meshes for shardability.
+    """
 
     tp: int                        # model-axis size
     dp: int                        # data-axis size
@@ -221,6 +253,55 @@ class ShardCtx:
         return f(x)
 
 
+def _require(cond: bool, cfg: ArchConfig, why: str) -> None:
+    if not cond:
+        raise ValueError(f"config '{cfg.name}': {why}")
+
+
+def validate_tp(cfg: ArchConfig, tp: int, *, shard_heads: bool,
+                h_pad: int) -> None:
+    """Eager divisibility checks for a tensor-parallel degree.
+
+    Shapes are mesh-invariant by contract (DESIGN.md §9), so a tp that does
+    not divide them is a configuration error — reported here, at
+    ``make_ctx`` time, with the config named, instead of surfacing as a
+    bare assert deep inside a layer init."""
+    if tp <= 1:
+        return
+    vp = cfg.vocab_padded
+    _require(vp % tp == 0, cfg,
+             f"padded vocab {vp} (vocab {cfg.vocab} padded to a fixed "
+             f"multiple of {VOCAB_PAD}, mesh-invariant) is not divisible "
+             f"by tp={tp}; pick a tp dividing {vp}")
+    uses_mlp = (cfg.kind in ("dense", "enc_dec", "vlm", "hybrid")
+                or bool(cfg.mla_q_rank))
+    if uses_mlp:
+        _require(cfg.d_ff % tp == 0, cfg,
+                 f"d_ff={cfg.d_ff} is not divisible by tp={tp} "
+                 f"(MLP is column->row parallel over the model axis)")
+    if cfg.kind == "moe":
+        _require(cfg.n_experts % tp == 0, cfg,
+                 f"n_experts={cfg.n_experts} is not divisible by tp={tp} "
+                 f"(experts are sharded over the model axis)")
+    if cfg.kind in ("ssm", "hybrid"):
+        _require(cfg.d_inner % tp == 0, cfg,
+                 f"d_inner={cfg.d_inner} is not divisible by tp={tp}")
+        _require(cfg.ssm_heads % tp == 0, cfg,
+                 f"ssm_heads={cfg.ssm_heads} is not divisible by tp={tp}")
+    # GQA head/KV nesting (MLA broadcasts k_rope per-head instead of
+    # slicing replicated KV heads, so the nesting constraint is GQA-only)
+    if (shard_heads and cfg.n_heads and not cfg.is_attn_free
+            and not cfg.mla_q_rank):
+        H = h_pad or cfg.n_heads
+        _require(H % cfg.n_kv == 0, cfg,
+                 f"n_heads={H} is not a multiple of n_kv={cfg.n_kv}")
+        Hl, g = H // tp, H // cfg.n_kv
+        _require(Hl % g == 0 or g % Hl == 0, cfg,
+                 f"local q-heads {Hl} and GQA group {g} do not nest at "
+                 f"tp={tp} (need Hl % g == 0 or g % Hl == 0 for the "
+                 f"replicated-KV slice)")
+
+
 def make_ctx(cfg: ArchConfig, tp: int, dp: int, pods: int = 1,
              pad_heads: bool = False, moe_a2a: bool = False) -> ShardCtx:
     h_pad = 0
@@ -228,6 +309,7 @@ def make_ctx(cfg: ArchConfig, tp: int, dp: int, pods: int = 1,
     if pad_heads and not shard and cfg.n_heads > 0:
         h_pad = pad_to(cfg.n_heads, tp)
         shard = True
+    validate_tp(cfg, tp, shard_heads=shard, h_pad=h_pad)
     return ShardCtx(
         tp=tp, dp=dp, pods=pods,
         pod_axis="pod" if pods > 1 else None,
@@ -241,12 +323,34 @@ def make_ctx(cfg: ArchConfig, tp: int, dp: int, pods: int = 1,
 # Parameter initialization helpers (global arrays + mirrored PartitionSpecs)
 # ---------------------------------------------------------------------------
 
+def path_key(key: jax.Array, token: str | int) -> jax.Array:
+    """Derive a child PRNG key from one path component.
+
+    The key of every parameter leaf is a pure function of (root key, leaf
+    path) — NOT of the order or number of sibling ``dense``/``child`` calls
+    — so key assignment is provably independent of the mesh and of any
+    layout decision an init function makes (DESIGN.md §9).  String
+    components are folded in via a stable 31-bit CRC; integer components
+    (stacked-layer indices) fold in directly and cannot collide with
+    strings in practice because stacked layers live in their own
+    name-derived subtree.
+    """
+    if isinstance(token, int):
+        return jax.random.fold_in(key, token)
+    return jax.random.fold_in(key, zlib.crc32(token.encode()) & 0x7FFFFFFF)
+
+
 class ParamBuilder:
     """Collects (value, spec) pairs into mirrored pytrees.
 
     ``abstract=True`` records ``jax.ShapeDtypeStruct`` leaves instead of
     materializing arrays — used by the dry-run and by spec-tree construction
     (no allocation, no RNG).
+
+    Key discipline: each leaf draws from ``path_key(subtree_key, name)``.
+    There is no sequential key consumption, so two builds of the same
+    architecture assign identical keys to identical paths no matter what
+    mesh (or code path ordering) produced them.
     """
 
     def __init__(self, key: jax.Array | None, dtype=jnp.bfloat16,
@@ -257,11 +361,10 @@ class ParamBuilder:
         self.params: dict = {}
         self.specs: dict = {}
 
-    def next_key(self) -> jax.Array | None:
+    def key_for(self, name: str | int) -> jax.Array | None:
         if self.abstract:
             return None
-        self._key, k = jax.random.split(self._key)
-        return k
+        return path_key(self._key, name)
 
     def _put(self, name, shape, dtype, make):
         if self.abstract:
@@ -275,7 +378,7 @@ class ParamBuilder:
         scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
         dt = dtype or self.dtype
         self._put(name, shape, dt,
-                  lambda: (jax.random.normal(self.next_key(), shape,
+                  lambda: (jax.random.normal(self.key_for(name), shape,
                                              jnp.float32) * scale).astype(dt))
         self.specs[name] = spec
 
@@ -297,37 +400,54 @@ class ParamBuilder:
         self.specs[name] = spec
 
     def child(self, name: str) -> "ParamBuilder":
-        sub = ParamBuilder(self.next_key(), self.dtype, self.abstract)
+        sub = ParamBuilder(self.key_for(name), self.dtype, self.abstract)
         self.params[name] = sub.params
         self.specs[name] = sub.specs
         return sub
 
     def stacked(self, name: str, n: int, init_fn) -> None:
         """Stack ``n`` copies of a sub-module's params along a new leading
-        layer axis (for ``lax.scan`` over layers)."""
+        layer axis (for ``lax.scan`` over layers).  Layer ``i`` builds from
+        ``path_key(path_key(subtree, name), i)``."""
         if self.abstract:
             b = ParamBuilder(None, self.dtype, abstract=True)
             init_fn(b)
             self.params[name] = jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype),
                 b.params)
+            spec = b.specs
         else:
+            base = self.key_for(name)
             subs = []
             spec = None
-            for _ in range(n):
-                b = ParamBuilder(self.next_key(), self.dtype)
+            for i in range(n):
+                b = ParamBuilder(path_key(base, i), self.dtype)
                 init_fn(b)
                 subs.append(b.params)
                 spec = b.specs
             self.params[name] = jax.tree.map(
                 lambda *xs: jnp.stack(xs), *subs)
-        if self.abstract:
-            bs = ParamBuilder(None, self.dtype, abstract=True)
-            init_fn(bs)
-            spec = bs.specs
 
         def lift(s: P) -> P:
             return P(None, *s)
 
         self.specs[name] = jax.tree.map(
             lift, spec, is_leaf=lambda x: isinstance(x, P))
+
+
+def zero_rows_from(b: ParamBuilder, name: str, start: int) -> None:
+    """Zero leaf ``name``'s rows [start:] (padding rows must not carry
+    random init — e.g. embedding vocab padding).  No-op when abstract or
+    when there is no padding."""
+    w = b.params.get(name)
+    if b.abstract or w is None or start >= w.shape[0]:
+        return
+    b.params[name] = w.at[start:, :].set(0)
+
+
+def zero_cols_from(b: ParamBuilder, name: str, start: int) -> None:
+    """Zero leaf ``name``'s trailing-dim columns [start:]."""
+    w = b.params.get(name)
+    if b.abstract or w is None or start >= w.shape[-1]:
+        return
+    b.params[name] = w.at[..., start:].set(0)

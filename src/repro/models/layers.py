@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.models.common import ParamBuilder, ShardCtx
+from repro.models.common import (ParamBuilder, ShardCtx, zero_rows_from)
 
 # ---------------------------------------------------------------------------
 # Norms (replicated)
@@ -85,17 +85,25 @@ def linear_rep(p, name, x):
 # Vocab-parallel embedding + LM head (+ sharded cross-entropy)
 # ---------------------------------------------------------------------------
 
-def init_embedding(b: ParamBuilder, name: str, vocab_padded: int, d: int):
+def init_embedding(b: ParamBuilder, name: str, vocab: int,
+                   vocab_padded: int, d: int):
     """Embedding table, vocab-sharded over model.
 
     The table is the row-sparse gradient tensor Zen synchronizes — the leaf
     path must match ``GradSync.sparse_paths`` (we use '<name>/table').
+
+    Padding rows [vocab:vocab_padded) are zero-initialized: padded ids are
+    never produced by the pipeline, so a non-zero init there would be dead
+    weight that (tied or head-side) could leak into the sharded logsumexp.
+    Their gradient is identically zero, so they never show up as non-zero
+    rows in the Zen encode or the measured d(1)/d(n) densities.
     """
     sub = b.child(name)
     sub.dense("table", (vocab_padded, d), P("model", None), scale=0.02)
+    zero_rows_from(sub, "table", vocab)
 
 
-def embed_lookup(p, name, tokens, ctx: ShardCtx, vocab_padded: int):
+def embed_lookup(p, name, tokens, ctx: ShardCtx):
     """tokens [B, S] -> [B, S, d]; table local shard is [Vp/tp, d]."""
     table = p[name]["table"]
     v_local = table.shape[0]
@@ -107,15 +115,26 @@ def embed_lookup(p, name, tokens, ctx: ShardCtx, vocab_padded: int):
     return ctx.psum_tp(out)
 
 
-def lm_head_logits(p, name, x, ctx: ShardCtx):
-    """Tied LM head: x [.., d] @ table.T -> local logits [.., Vp/tp]."""
-    table = p[name]["table"]
-    return x @ table.T
+def mask_padded_logits(lf, ctx: ShardCtx, valid_vocab: int | None):
+    """Set logits of padded vocab columns (global id >= ``valid_vocab``) to
+    ``NEG`` so they vanish from logsumexp/argmax and carry zero gradient —
+    padding must never change the loss, the sampled token, or the gradients
+    feeding the sync path (DESIGN.md §9)."""
+    if valid_vocab is None:
+        return lf
+    v_local = lf.shape[-1]
+    off = ctx.tp_rank() * v_local if ctx.tp > 1 else 0
+    ok = (off + jnp.arange(v_local)) < valid_vocab
+    return jnp.where(ok, lf, jnp.asarray(NEG, lf.dtype))
 
 
-def cross_entropy_parts(logits_l, labels, ctx: ShardCtx, mask=None):
-    """(nll_sum, token_count) over vocab-sharded logits [.., V/tp]."""
-    lf = logits_l.astype(jnp.float32)
+def cross_entropy_parts(logits_l, labels, ctx: ShardCtx, mask=None, *,
+                        valid_vocab: int | None = None):
+    """(nll_sum, token_count) over vocab-sharded logits [.., V/tp].
+
+    ``valid_vocab`` excludes padded vocab columns from the logsumexp (and
+    from the gradient); labels must always be < valid_vocab."""
+    lf = mask_padded_logits(logits_l.astype(jnp.float32), ctx, valid_vocab)
     v_local = lf.shape[-1]
     # stop_gradient: the max shift is purely for numerical stability, and
     # pmax has no differentiation rule (its "gradient" would cancel anyway).
@@ -134,14 +153,16 @@ def cross_entropy_parts(logits_l, labels, ctx: ShardCtx, mask=None):
     return jnp.sum(nll * mf), jnp.sum(mf)
 
 
-def cross_entropy_sharded(logits_l, labels, ctx: ShardCtx, *, mask=None):
+def cross_entropy_sharded(logits_l, labels, ctx: ShardCtx, *, mask=None,
+                          valid_vocab: int | None = None):
     """Mean next-token CE over vocab-sharded logits (see parts)."""
-    s, c = cross_entropy_parts(logits_l, labels, ctx, mask)
+    s, c = cross_entropy_parts(logits_l, labels, ctx, mask,
+                               valid_vocab=valid_vocab)
     return s / jnp.maximum(c, 1.0)
 
 
 def lm_head_loss_chunked(p, name, x, labels, ctx: ShardCtx, *, mask=None,
-                         chunk: int = 512):
+                         valid_vocab: int | None = None, chunk: int = 512):
     """Fused LM-head + CE, scanned over sequence chunks.
 
     Never materializes the full [B, S, V/tp] logits — the peak transient is
@@ -165,7 +186,8 @@ def lm_head_loss_chunked(p, name, x, labels, ctx: ShardCtx, *, mask=None,
         s_acc, n_acc = carry
         x_b, l_b, m_b = inp
         logits = linear_col(p, name, x_b)
-        s, n = cross_entropy_parts(logits, l_b, ctx, m_b)
+        s, n = cross_entropy_parts(logits, l_b, ctx, m_b,
+                                   valid_vocab=valid_vocab)
         return (s_acc + s, n_acc + n), None
 
     (s, n), _ = lax.scan(body, (jnp.float32(0), jnp.float32(0)),

@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.models.common import ArchConfig, ParamBuilder, ShardCtx
+from repro.models.common import (ArchConfig, ParamBuilder, ShardCtx,
+                                 make_ctx, zero_cols_from)
 from repro.models import layers as L
 from repro.models import attention as A
 from repro.models import moe as M
@@ -139,9 +140,12 @@ class Model:
 
     def _build(self, b: ParamBuilder):
         cfg, ctx = self.cfg, self.ctx
-        vp = cfg.vocab_padded(ctx.tp)
-        L.init_embedding(b, "embed", vp, cfg.d_model)
+        vp = cfg.vocab_padded
+        L.init_embedding(b, "embed", cfg.vocab, vp, cfg.d_model)
         L.init_linear(b, "lm_head", cfg.d_model, vp, mode="col", tp=ctx.tp)
+        # padded LM-head columns: zero-init (masked out of the logsumexp /
+        # argmax anyway, so they receive zero gradient and stay zero)
+        zero_cols_from(b, "lm_head_w", cfg.vocab)
         L.init_rmsnorm(b, "ln_f", cfg.d_model)
         if cfg.kind == "ssm":
             b.stacked("layers", cfg.n_layers, functools.partial(
@@ -205,8 +209,13 @@ class Model:
     # ---- forward (shared trunk) ---------------------------------------------
 
     def _embed(self, params, tokens):
-        vp = self.cfg.vocab_padded(self.ctx.tp)
-        return L.embed_lookup(params, "embed", tokens, self.ctx, vp)
+        return L.embed_lookup(params, "embed", tokens, self.ctx)
+
+    def _head_logits(self, params, x):
+        """Local LM-head logits with padded vocab columns masked to NEG —
+        padding can never win an argmax or leak into a softmax."""
+        logits_l = L.linear_col(params, "lm_head", x)
+        return L.mask_padded_logits(logits_l, self.ctx, self.cfg.vocab)
 
     def _trunk(self, params, x, *, positions=None, window: int = 0,
                enc_out=None):
@@ -296,7 +305,7 @@ class Model:
             x = x[:, batch["patches"].shape[1]:]
             labels = labels[:, batch["patches"].shape[1]:]
         loss = L.lm_head_loss_chunked(params, "lm_head", x, labels, ctx,
-                                      mask=labels >= 0)
+                                      mask=labels >= 0, valid_vocab=cfg.vocab)
         metrics = {"loss": loss, **{k: jnp.asarray(v) for k, v in
                                     (stats or {}).items()}}
         if cfg.kind == "moe" and "moe/aux_loss" in metrics:
@@ -408,8 +417,9 @@ class Model:
             new_cache = dict(cache, t=t + 1, layers=new_layers)
 
         x = L.rmsnorm(params["ln_f"], x)
-        logits_l = L.linear_col(params, "lm_head", x)      # [B, V/tp]
-        # greedy global argmax over the vocab-sharded logits
+        logits_l = self._head_logits(params, x)            # [B, V/tp]
+        # greedy global argmax over the vocab-sharded logits (padded
+        # columns are already masked to NEG and cannot be selected)
         lf = logits_l.astype(jnp.float32)
         m_l = jnp.max(lf, axis=-1)
         i_l = jnp.argmax(lf, axis=-1).astype(jnp.int32)
@@ -472,7 +482,7 @@ class Model:
             x, tail_c = lax.scan(ssm_body, x, params["tail"])
             cache["ssm_tail"] = tail_c
         x_last = L.rmsnorm(params["ln_f"], x[:, -1])
-        logits_l = L.linear_col(params, "lm_head", x_last)
+        logits_l = self._head_logits(params, x_last)
         return logits_l, cache
 
     # ---- prefill -----------------------------------------------------------------
@@ -502,7 +512,7 @@ class Model:
                 return carry + y, cl
             x, layer_caches = lax.scan(body, x, params["layers"])
             x_last = L.rmsnorm(params["ln_f"], x[:, -1])
-            logits_l = L.linear_col(params, "lm_head", x_last)
+            logits_l = self._head_logits(params, x_last)
             return logits_l, {"t": jnp.asarray(Sfull, jnp.int32),
                               "layers": layer_caches}
 
@@ -522,7 +532,7 @@ class Model:
                 return y, (kv, jnp.stack([cc["k"], cc["v"]]))
             x, (layer_caches, cross) = lax.scan(body_ed, x, params["layers"])
             x_last = L.rmsnorm(params["ln_f"], x[:, -1])
-            logits_l = L.linear_col(params, "lm_head", x_last)
+            logits_l = self._head_logits(params, x_last)
             return logits_l, {"t": jnp.asarray(Sfull, jnp.int32),
                               "layers": layer_caches, "cross": cross}
 
@@ -561,7 +571,7 @@ class Model:
         else:
             x, layer_caches = lax.scan(body, x, params["layers"])
         x_last = L.rmsnorm(params["ln_f"], x[:, -1])
-        logits_l = L.linear_col(params, "lm_head", x_last)
+        logits_l = self._head_logits(params, x_last)
         cache = {"t": jnp.asarray(Sfull, jnp.int32), "layers": layer_caches}
         return logits_l, cache
 
@@ -573,3 +583,38 @@ def build_model(cfg: ArchConfig, ctx: ShardCtx) -> Model:
         m.n_groups = cfg.n_layers // every
         m.n_tail = cfg.n_layers - m.n_groups * every
     return m
+
+
+def assert_mesh_invariant_params(cfg: ArchConfig, ctx: ShardCtx,
+                                 shapes=None) -> None:
+    """Enforce the DESIGN.md §9 contract: the *global* parameter pytree
+    (paths, shapes, dtypes) must be identical to the tp=1 reference build.
+
+    Runs on every ``build_program`` (abstract builds only — no allocation),
+    so a layer init that silently makes a global shape depend on the mesh
+    fails loudly at build time instead of surfacing as a cross-mesh loss
+    mismatch three experiments later.  The opt-in ``h_pad`` layout is the
+    one documented exception (it changes global shapes by design).
+    """
+    if ctx.h_pad:
+        return
+    if shapes is None:
+        shapes = build_model(cfg, ctx).abstract()[0]
+    ref_ctx = make_ctx(cfg, 1, 1)
+    ref_shapes = build_model(cfg, ref_ctx).abstract()[0]
+    got = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    ref = jax.tree_util.tree_flatten_with_path(ref_shapes)[0]
+    bad = []
+    for (kp, s), (rkp, rs) in zip(got, ref):
+        if kp != rkp or s.shape != rs.shape or s.dtype != rs.dtype:
+            bad.append(f"{jax.tree_util.keystr(kp)}: "
+                       f"{s.shape}/{s.dtype} != {rs.shape}/{rs.dtype} "
+                       f"(tp={ctx.tp} vs tp=1)")
+    if len(got) != len(ref):
+        bad.append(f"leaf count {len(got)} != {len(ref)} (tp={ctx.tp} "
+                   f"vs tp=1)")
+    if bad:
+        raise AssertionError(
+            f"config '{cfg.name}': global param pytree depends on the mesh "
+            f"— violates the TP mesh-invariance contract (DESIGN.md §9):\n  "
+            + "\n  ".join(bad[:20]))

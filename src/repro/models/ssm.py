@@ -46,12 +46,9 @@ def init_mamba2(b: ParamBuilder, name: str, cfg: ArchConfig, ctx: ShardCtx):
     # gated norm over the sharded d_inner dim: scale is model-sharded and
     # the variance is psum'd (layers.rmsnorm_sharded)
     sub.ones("norm", (din,), P("model"), dtype=jnp.float32)
-    # fix replicated-vs-sharded specs for per-head vectors
-    if ctx.tp == 1:
-        sub.specs["A_log"] = P(None)
-        sub.specs["dt_bias"] = P(None)
-        sub.specs["D"] = P(None)
-        sub.specs["norm"] = P(None)
+    # Per-head vectors keep P("model") at every tp (a 1-sized model axis
+    # shards trivially): the spec TREE is identical on every mesh, which
+    # the §9 contract relies on — only axis sizes may differ.
 
 
 def _causal_conv(x, w, bias):

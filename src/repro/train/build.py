@@ -14,7 +14,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.data.pipeline import make_batch_specs
 from repro.models.common import ArchConfig, make_ctx
-from repro.models.model import Model, build_model
+from repro.models.model import (Model, assert_mesh_invariant_params,
+                                build_model)
 from repro.train import steps as st
 from repro.train.steps import TrainerConfig
 
@@ -105,6 +106,9 @@ def build_program(cfg: ArchConfig, mesh: Mesh,
     ctx = make_ctx(cfg, tp, dp, pods, pad_heads=pad_heads, moe_a2a=moe_a2a)
     model = build_model(cfg, ctx)
     shapes, specs = model.abstract()
+    # hard contract (DESIGN.md §9): the global param pytree must not depend
+    # on the mesh — cheap (abstract-only) and runs on every build
+    assert_mesh_invariant_params(cfg, ctx, shapes)
     return Program(cfg=cfg, model=model, mesh=mesh,
                    tcfg=tcfg or TrainerConfig(),
                    param_shapes=shapes, param_specs=specs)

@@ -1,13 +1,17 @@
 """Multi-device integration (subprocess: 8 host devices).
 
 Checks the claims that need a real multi-worker mesh:
-  * TP/DP consistency: loss identical across mesh shapes (f32);
+  * cross-mesh parity (DESIGN.md §9): loss identical across mesh shapes
+    (f32) for EVERY sync scheme — a fast 2-config subset runs in tier-1
+    on every CI run, the full {arch} x {mesh} x {scheme} matrix runs in
+    the CI multidevice job via ``make test-crossmesh``
+    (``REPRO_CROSSMESH=full``);
   * Zen sync == dense psum sync end-to-end at dp > 1 (the paper's
     no-information-loss claim at trainer level);
   * shard_map schemes == vmap simulation.
 
-Split into two subprocesses so the known-broken cross-mesh comparison
-(xfail) cannot mask the sync-level claims, which must stay hard failures.
+Split into separate subprocesses so a cross-mesh model-layer regression
+cannot mask the sync-level claims (and vice versa).
 """
 import os
 import subprocess
@@ -55,15 +59,95 @@ PRELUDE = textwrap.dedent("""
                         if k.startswith("sync/")}
 """)
 
-WORKER_CROSS_MESH = PRELUDE + textwrap.dedent("""
-    for arch in ["qwen2-0.5b", "mamba2-370m", "olmoe-1b-7b"]:
-        base, _ = run(arch, (1, 1), "zen")
-        tp, _ = run(arch, (2, 4), "zen")
-        for a, b_ in zip(base, tp):
-            assert abs(a - b_) < 1e-3, (arch, base, tp)
-        print("CONSISTENT", arch, base, tp)
+# --- cross-mesh parity (DESIGN.md §9) --------------------------------------
+# Scheme variants of the parity matrix: (sync scheme, compress spec).
+CROSS_MESH_LIB = PRELUDE + textwrap.dedent("""
+    SCHEMES = {
+        "dense":   ("dense", "none"),
+        "zen":     ("zen", "none"),
+        "auto":    ("auto", "none"),
+        "topk-ef": ("auto", "topk:0.02"),
+    }
+
+    def check_parity(arch, meshes, schemes, steps=4, tol=1e-3,
+                     lossy_band=1.0):
+        '''Hard loss-parity matrix: for each scheme, every mesh must match
+        the (1,1) baseline at step 0 and step ``steps-1``.
+
+        Lossless sync (dense/zen/auto) shares one (1,1) baseline — at
+        dp=1 the data sync is the identity, so their trajectories are
+        the same run — which makes the lossless legs simultaneously a
+        zen==dense==auto parity check.  Lossy compression (topk EF) gets
+        exact step-0 parity (the pre-update forward is mesh-invariant)
+        but only a broad band + progress check afterwards: per-worker
+        top-k picks are a function of the LOCAL gradient, so the update
+        direction legitimately depends on the dp partition (DESIGN.md
+        §9; observed cross-mesh step-3 drift up to 0.44 on a ~5 loss).
+        '''
+        base = {}
+        for name in schemes:
+            scheme, compress = SCHEMES[name]
+            lossy = compress != "none"
+            bkey = "lossy" if lossy else "lossless"
+            bscheme, bcompress = ("auto", compress) if lossy \
+                else ("dense", "none")
+            if bkey not in base:
+                base[bkey], _ = run(arch, (1, 1), bscheme, steps=steps,
+                                    compress=bcompress)
+            b = base[bkey]
+            assert all(np.isfinite(x) for x in b), (arch, name, b)
+            for ms in meshes:
+                if ms == (1, 1) and (scheme, compress) == (bscheme,
+                                                           bcompress):
+                    continue    # that run IS the baseline
+                ls, _ = run(arch, ms, scheme, steps=steps,
+                            compress=compress)
+                assert all(np.isfinite(x) for x in ls), (arch, name, ms, ls)
+                d0, dN = abs(ls[0] - b[0]), abs(ls[-1] - b[-1])
+                assert d0 < tol, ("step-0", arch, name, ms, ls, b)
+                if lossy:
+                    assert dN < lossy_band, \
+                        ("step-%d" % (steps - 1), arch, name, ms, ls, b)
+                    # EF must still train on every mesh, not stall
+                    assert ls[-1] < ls[0] - 0.3, (arch, name, ms, ls)
+                else:
+                    assert dN < tol, \
+                        ("step-%d" % (steps - 1), arch, name, ms, ls, b)
+                print("PARITY", arch, name, ms, "d0=%.2e dN=%.2e" % (d0, dN))
+""")
+
+WORKER_CROSS_MESH_FAST = CROSS_MESH_LIB + textwrap.dedent("""
+    check_parity("qwen2-0.5b", [(1, 1), (2, 4)], ["zen"])
+    check_parity("mamba2-370m", [(1, 1), (4, 2)], ["dense"])
     print("ALL_OK")
 """)
+
+# full matrix: {attention, MoE, SSM} x 4 meshes x 4 schemes.  olmoe's
+# reduced config has 4 experts (experts shard over model), so its pure-TP
+# mesh is capped at tp=4 and the tp=8 slot becomes pure-DP (8,1) —
+# make_ctx rejects (1,8) for it with a config-named ValueError, which
+# tests/test_mesh_invariance.py asserts.
+MATRIX_MESHES = {
+    "qwen2-0.5b": [(1, 1), (1, 8), (2, 4), (4, 2)],
+    "olmoe-1b-7b": [(1, 1), (8, 1), (2, 4), (4, 2)],
+    "mamba2-370m": [(1, 1), (1, 8), (2, 4), (4, 2)],
+}
+
+
+# f32 lossless tolerance per arch: attention/SSM sit at reduction-order
+# noise (observed <= 1e-6); MoE's renormalized top-k router amplifies it
+# through discrete routing (observed step-3 drift up to 7.6e-4), so the
+# MoE gate gets headroom over the observation instead of sitting on it.
+MATRIX_TOL = {"qwen2-0.5b": 1e-3, "olmoe-1b-7b": 2.5e-3,
+              "mamba2-370m": 1e-3}
+
+
+def _matrix_worker(arch: str) -> str:
+    return CROSS_MESH_LIB + textwrap.dedent(f"""
+        check_parity({arch!r}, {MATRIX_MESHES[arch]!r}, list(SCHEMES),
+                     tol={MATRIX_TOL[arch]!r})
+        print("ALL_OK")
+    """)
 
 WORKER_SYNC = PRELUDE + textwrap.dedent("""
     # Zen == dense end-to-end at dp=4 (f32 exact-ish)
@@ -126,17 +210,29 @@ def _run_worker(script: str) -> None:
 
 
 @pytest.mark.slow
-@pytest.mark.xfail(
-    reason="pre-existing model-layer TP inconsistency: first-step loss "
-           "differs between (1,1) and (2,4) meshes for EVERY sync scheme "
-           "(dense included), so the mismatch is in the TP forward/init "
-           "path, not gradient synchronization. Tracked in ROADMAP.md "
-           "'Open items' for a model-zoo PR.  strict=True: if a refactor "
-           "fixes the forward path, this must FAIL so the xfail (and the "
-           "ROADMAP entry) get removed instead of rotting.",
-    strict=True)
 def test_cross_mesh_consistency():
-    _run_worker(WORKER_CROSS_MESH)
+    """Cross-mesh loss parity, HARD assertion (fast 2-config subset).
+
+    Replaces the PR-1..3 strict xfail: the model-layer TP inconsistency
+    was mesh-dependent *init* — legacy non-partitionable threefry drew
+    different bits for row-sharded leaves under a sharded out-sharding —
+    fixed by jax_threefry_partitionable (repro/__init__.py) + the
+    path-keyed ParamBuilder; any regression must fail tier-1 on every
+    CI run, not just the multidevice job."""
+    _run_worker(WORKER_CROSS_MESH_FAST)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", list(MATRIX_MESHES))
+def test_cross_mesh_parity_matrix(arch):
+    """Full §9 parity matrix for one architecture (4 meshes x 4 schemes).
+
+    Runs when REPRO_CROSSMESH=full (``make test-crossmesh``, wired into
+    the CI multidevice job); skipped in plain tier-1 where the fast
+    subset above covers the invariant."""
+    if os.environ.get("REPRO_CROSSMESH") != "full":
+        pytest.skip("full parity matrix runs via `make test-crossmesh`")
+    _run_worker(_matrix_worker(arch))
 
 
 @pytest.mark.slow
