@@ -7,7 +7,7 @@ PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 # formatter and reflowing it would bury real diffs)
 FORMATTED := src/repro/train/schedule.py benchmarks/check_regression.py
 
-.PHONY: test test-crossmesh lint check-bytecode bench-smoke bench-gate ci
+.PHONY: test test-crossmesh test-hier lint check-bytecode bench-smoke bench-gate ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -21,6 +21,15 @@ test:
 test-crossmesh:
 	REPRO_CROSSMESH=full $(PY) -m pytest -x -q \
 		tests/test_multidevice.py -k "cross_mesh_parity_matrix"
+
+# full hierarchical-topology invariance matrix (DESIGN.md §10): meshes
+# {(1,1),(8,1),(2,4)} x node_size {1,2,4} x {dense, zen, auto} on 8 host
+# devices, non-dividing combos asserted to fail fast.  Tier-1 always runs
+# the fast subset (test_hierarchical_sync_on_mesh); the CI multidevice
+# job's hierarchical leg runs this full matrix.
+test-hier:
+	REPRO_HIER=full $(PY) -m pytest -x -q \
+		tests/test_multidevice.py -k "hierarchical_parity_matrix"
 
 # fail if any python bytecode is tracked by git (a PR-2 leak committed 84
 # __pycache__ files; .gitignore prevents new ones, this gate enforces it)

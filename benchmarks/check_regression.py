@@ -49,7 +49,7 @@ import json
 import os
 import sys
 
-VOLUME_KEYS = ("sent_words", "dense_words", "overflow")
+VOLUME_KEYS = ("sent_words", "dense_words", "overflow", "intra_words", "inter_words")
 JITTER_US = 500.0  # below this, wall time on shared hosts is pure jitter
 
 

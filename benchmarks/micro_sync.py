@@ -177,6 +177,72 @@ def bench_bucketed(results: list, densities=DENSITIES) -> None:
              f"mono/bucketed={times['mono'] / times['bucketed']:.2f}x")
 
 
+HIER_DENSITIES = (0.01, 0.1)   # both modes: the inter-volume bar (§10)
+NODE_SIZE = 2                  # N=4 workers -> 2 nodes x 2 devices
+
+
+def bench_hier(results: list, densities=HIER_DENSITIES) -> None:
+    """Two-level CommPlan series (DESIGN.md §10): flat zen vs the
+    hierarchical plans over a node-split topology, at matched density.
+    The acceptance bar — the two-level plan's wire volume on the INTER
+    level must not exceed flat zen's total at d in {0.01, 0.1} — is
+    asserted here, so the CI bench gate enforces it on every run; the
+    recorded ``inter_words`` are also exact-gated by check_regression."""
+    from repro.core import topology as tpg
+
+    topo = tpg.build_topology(N, NODE_SIZE)
+    for density in densities:
+        vals = _workers(M, density)
+        budget = min(0.5, 4 * density)
+        lo_flat = schemes.make_zen_layout(M, N, density_budget=budget)
+        flat_run = jax.jit(functools.partial(
+            schemes.simulate, schemes.zen_sync, layout=lo_flat))
+        _, st_flat = flat_run(vals)
+        flat_words = float(np.asarray(st_flat.sent_words).mean())
+
+        lo_intra = schemes.make_zen_layout(
+            M, NODE_SIZE, density_budget=budget)
+        lo_inter = schemes.make_zen_layout(
+            M, N // NODE_SIZE,
+            density_budget=min(1.0, budget * NODE_SIZE))
+        cap = max(64, int(M * min(1.0, budget * NODE_SIZE)))
+        plans = {
+            "hier(zen@intra,zen@inter)": {0: dict(layout=lo_intra),
+                                          1: dict(layout=lo_inter)},
+            "hier(zen@intra,agsparse@inter)": {0: dict(layout=lo_intra),
+                                               1: dict(capacity=cap)},
+            "hier(dense@intra,dense@inter)": {},
+        }
+        best_inter = None
+        for tag, stage_kw in plans.items():
+            plan = tpg.parse_plan(tag)
+            run = jax.jit(functools.partial(
+                schemes.simulate_hier, topology=topo, plan=plan,
+                stage_kw=stage_kw))
+            out, st = run(vals)
+            assert int(np.asarray(st.overflow).sum()) == 0, (tag, density)
+            intra_w = float(np.asarray(st.by_level[0]).mean())
+            inter_w = float(np.asarray(st.by_level[1]).mean())
+            _record(
+                results, f"hier[{tag},d={density}]", time_fn(run, vals),
+                stage="hier_e2e", scheme=tag, density=density,
+                backend="xla", node_size=NODE_SIZE,
+                sent_words=float(np.asarray(st.sent_words).mean()),
+                intra_words=intra_w, inter_words=inter_w,
+                flat_zen_words=flat_words,
+            )
+            if tag != "hier(dense@intra,dense@inter)":
+                assert inter_w <= flat_words, (
+                    f"{tag} moves {inter_w:.0f} words across the slow "
+                    f"(inter) links at d={density} — more than flat "
+                    f"zen's {flat_words:.0f} total; the hierarchy must "
+                    f"RELIEVE the slow links (DESIGN.md §10)")
+                best_inter = (inter_w if best_inter is None
+                              else min(best_inter, inter_w))
+        emit(f"micro_sync/hier_inter_ratio[d={density}]", 0.0,
+             f"best_inter/flat_zen={best_inter / flat_words:.3f}")
+
+
 COMPRESS_DENSITIES = (0.01, 0.05)  # smoke keeps 0.01: the acceptance bar
 
 
@@ -263,6 +329,9 @@ def main(argv=()) -> None:
         bench_stages(results)
         bench_end_to_end(results, densities)
         bench_bucketed(results, densities)
+        # hier keeps BOTH densities in smoke mode: the inter-level wire
+        # bar must hold on every CI bench-gate run
+        bench_hier(results)
         bench_compress(results, compress_densities)
         for r in results:
             if r.get("stage") == "bucketed_e2e":

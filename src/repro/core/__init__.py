@@ -5,6 +5,8 @@ Submodules:
   formats    COO / bitmap / tensor-block / hash-bitmap (Alg. 2) formats
   metrics    sparsity characteristics (Defs. 3–6)
   costmodel  analytical communication-time models (Fig. 7, Appendix B)
+             + α-β times over topologies (DESIGN.md §10)
+  topology   Topology + CommPlan IR — the shape of the DP world (§10)
   schemes    executable SPMD synchronization schemes (Table 2)
   zen        GradSync — gradient synchronization as a trainer feature
 """
@@ -29,5 +31,19 @@ from repro.core.schemes import (  # noqa: F401
     sparse_ps_sync,
     omnireduce_sync,
     simulate,
+)
+from repro.core.schemes import (  # noqa: F401
+    hier_sync,
+    simulate_hier,
+    stage_sync,
+)
+from repro.core.topology import (  # noqa: F401
+    CommPlan,
+    Topology,
+    build_topology,
+    flat_topology,
+    hier_plan,
+    parse_plan,
+    two_level_topology,
 )
 from repro.core.zen import GradSync, SyncConfig  # noqa: F401

@@ -32,9 +32,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.schemes import SyncStats
+from repro.core.topology import parse_plan
 
 DENSE = "dense_fused"
 SPARSE = "sparse"
+
+
+def _all_dense(tag: str) -> bool:
+    """Whether a plan tag moves only psum traffic: the bare 'dense' tag,
+    or a hier plan whose every stage is dense — those buckets' words
+    belong in ``sync/dense_words`` no matter the topology, so the
+    dense/sparse volume split means the same thing at every node_size."""
+    if tag == "dense":
+        return True
+    if tag.startswith("hier("):
+        try:
+            return all(s.scheme == "dense" for s in parse_plan(tag).stages)
+        except ValueError:
+            return False
+    return False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,7 +71,12 @@ class Bucket:
 
     bid: int
     kind: str                     # DENSE | SPARSE
-    scheme: str                   # resolved sync scheme for this bucket
+    # Resolved CommPlan tag (core/topology.py grammar).  On a flat
+    # topology this is the bare scheme name — byte-identical to the
+    # pre-topology tags; on a hierarchical topology 'auto' resolves to
+    # tags like 'hier(zen@intra,dense@inter)' while explicit schemes
+    # keep their bare name (expanded per-level at commit time).
+    scheme: str
     slots: tuple[LeafSlot, ...]   # exactly 1 slot when kind == SPARSE
     nbytes: int
     # Compressor tag (core/sparsify.py spec string, e.g. 'topk:0.01') for
@@ -241,20 +262,30 @@ def reduce_stats(
     overflow = jnp.int32(0)
     tags: dict[str, int] = {}
     n_compressed = 0
+    level_words: list = []
     for b, st in zip(plan.buckets, per_bucket):
         overflow = overflow + st.overflow
-        if b.kind == SPARSE or b.scheme != "dense":
+        if b.kind == SPARSE or not _all_dense(b.scheme):
             sent = sent + st.sent_words
         else:
             dense_words = dense_words + st.sent_words
         tags[b.scheme] = tags.get(b.scheme, 0) + 1
         n_compressed += b.compress != "none"
+        # hierarchical plans tag wire words by topology level (fastest
+        # first); accumulate a whole-step per-level split
+        for i, w in enumerate(getattr(st, "by_level", ()) or ()):
+            while len(level_words) <= i:
+                level_words.append(jnp.float32(0.0))
+            level_words[i] = level_words[i] + w
     stats = {
         "sync/sparse_sent_words": sent,
         "sync/overflow": overflow,
         "sync/dense_words": dense_words,
         "sync/n_buckets": jnp.float32(len(plan.buckets)),
     }
+    if len(level_words) >= 2:
+        stats["sync/intra_words"] = level_words[0]
+        stats["sync/inter_words"] = level_words[-1]
     if n_compressed:
         stats["sync/compressed_buckets"] = jnp.float32(n_compressed)
     for scheme, count in sorted(tags.items()):

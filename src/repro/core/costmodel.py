@@ -20,6 +20,13 @@ from typing import Callable
 import numpy as np
 
 from repro.core import metrics
+from repro.core.topology import (
+    CommPlan,
+    Level,
+    Topology,
+    flat_plan,
+    hier_plan,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,9 +150,18 @@ def zen(p: SparsityProfile, n: int) -> float:
     return push + pull
 
 
-def lower_bound(p: SparsityProfile, n: int) -> float:
+def lower_bound(p: SparsityProfile, n: "int | Topology") -> float:
     """§4.1 footnote 3: receive the aggregated non-zeros of the other n-1
-    workers, index-free: d_G^(n-1) M."""
+    workers, index-free: d_G^(n-1) M.  With a ``Topology`` the floor is
+    β-weighted per level: every plan must move at least the flat floor's
+    words over each level's links (see ``plan_times``)."""
+    if isinstance(n, Topology):
+        lb, k = 0.0, 1
+        for lvl in n.levels:
+            if lvl.size > 1:
+                lb += lvl.beta * lower_bound(merged_profile(p, k), lvl.size)
+            k *= lvl.size
+        return lb
     return p.d(n - 1) * p.M * p.vw if n > 1 else 0.0
 
 
@@ -160,9 +176,127 @@ SCHEMES: dict[str, Callable[[SparsityProfile, int], float]] = {
     "lower_bound": lower_bound,
 }
 
+# Message-round counts per scheme — the α (latency) term of the α-β link
+# model.  A ring allreduce is 2(n-1) rounds; an all_gather ring n-1; a2a
+# push + all_gather pull schemes pay both; recursive doubling log2 n.
+ROUNDS: dict[str, Callable[[int], float]] = {
+    "dense": lambda n: 2.0 * (n - 1),
+    "agsparse": lambda n: float(n - 1),
+    "sparcml": lambda n: float(math.ceil(math.log2(max(n, 2)))),
+    "sparse_ps": lambda n: 2.0 * (n - 1),
+    "omnireduce": lambda n: 2.0 * (n - 1),
+    "balanced_parallelism": lambda n: 2.0 * (n - 1),
+    "zen": lambda n: 2.0 * (n - 1),
+    "lower_bound": lambda n: 1.0,
+}
 
-def normalized_times(p: SparsityProfile, n: int) -> dict[str, float]:
-    """All schemes normalized to dense ring-allreduce (Fig. 7 y-axis)."""
+
+# ---------------------------------------------------------------------------
+# α-β times over a Topology (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def merged_profile(p: SparsityProfile, k: int) -> SparsityProfile:
+    """The per-*node* profile after aggregating ``k`` workers inside a
+    node: one node-level "worker" now carries density ``d(k)``, and i
+    nodes together carry ``d(i*k)`` — the boundary semantics of the intra
+    merge.  Skew and block curves shift the same way."""
+    if k <= 1:
+        return p
+    return SparsityProfile(
+        M=p.M,
+        d=lambda i: p.d(max(i, 1) * k),
+        s=p.s,
+        block=p.block,
+        block_density=(None if p.block_density is None
+                       else (lambda i: p.block_density(max(i, 1) * k))),
+        block_max=(None if p.block_max is None
+                   else (lambda i, parts: p.block_max(max(i, 1) * k, parts))),
+        vw=p.vw,
+    )
+
+
+def stage_time(scheme: str, p: SparsityProfile, level: Level) -> float:
+    """α-β time (µs) of one plan stage: ``alpha * rounds + beta * words``.
+    A size-1 level is free (nothing to synchronize)."""
+    n = level.size
+    if n <= 1:
+        return 0.0
+    return level.alpha * ROUNDS[scheme](n) + level.beta * SCHEMES[scheme](p, n)
+
+
+def plan_time(plan: CommPlan, p: SparsityProfile, topo: Topology) -> float:
+    """α-β time of a full CommPlan: stages run fastest level first, and
+    each later stage sees the profile *merged* over every earlier level
+    (capacity growth at the intra merge)."""
+    t, k = 0.0, 1
+    for stage in plan.stages:
+        lvl = topo.levels[stage.level]
+        t += stage_time(stage.scheme, merged_profile(p, k), lvl)
+        k *= lvl.size
+    return t
+
+
+def _feasible(scheme: str, n: int, M: int) -> bool:
+    """Whether a scheme can run at a level of size ``n`` (static shape /
+    divisibility constraints from core/schemes.py)."""
+    if n <= 1:
+        return scheme == "dense"   # size-1 level: only the free identity
+    if scheme == "sparcml":
+        return n & (n - 1) == 0
+    if scheme == "sparse_ps":
+        return M % n == 0
+    return True
+
+
+# Per-level candidate schemes for hierarchical planning.  sparse_ps /
+# omnireduce are deliberately absent: they are the paper's imbalanced
+# strawmen and carry divisibility constraints — explicit tags can still
+# request them, the planner just never picks them.
+_HIER_CANDIDATES = ("dense", "zen", "agsparse", "sparcml")
+
+
+def candidate_plans(topo: Topology, M: int = 0) -> list[CommPlan]:
+    """Every plan the hierarchical planner considers, dense-first (so an
+    argmin with ties resolves toward dense, matching ``choose_scheme``'s
+    flat tie-break)."""
+    if topo.flat:
+        return [flat_plan("dense"), flat_plan("zen")]
+    intra = [s for s in _HIER_CANDIDATES
+             if _feasible(s, topo.intra.size, M)]
+    inter = [s for s in _HIER_CANDIDATES
+             if _feasible(s, topo.inter.size, M)]
+    return [hier_plan(si, se) for si in intra for se in inter]
+
+
+def plan_times(p: SparsityProfile, topo: Topology) -> dict[str, float]:
+    """α-β time per candidate plan tag, plus the ``lower_bound`` floor
+    (β-weighted per-level information minimum)."""
+    out = {pl.tag(): plan_time(pl, p, topo) for pl in candidate_plans(topo, p.M)}
+    out["lower_bound"] = lower_bound(p, topo)
+    return out
+
+
+def normalized_times(
+    p: SparsityProfile, n: "int | Topology"
+) -> dict[str, float]:
+    """All schemes normalized to dense ring-allreduce (Fig. 7 y-axis).
+
+    With an ``int`` (the historical signature) this is pure word volume.
+    With a flat ``Topology`` the α-β times are normalized the same way —
+    and on the *degenerate* topology (α=0, β=1) the result is exactly the
+    int version.  With a two-level topology the keys are CommPlan tags
+    (``hier(zen@intra,agsparse@inter)``, ...) normalized to the
+    hierarchical dense plan."""
+    if isinstance(n, Topology):
+        topo = n
+        if topo.flat:
+            lvl = topo.intra
+            base = stage_time("dense", p, lvl)
+            return {name: stage_time(name, p, lvl) / base
+                    for name in SCHEMES}
+        times = plan_times(p, topo)
+        base = times[hier_plan("dense", "dense").tag()]
+        return {tag: t / base for tag, t in times.items()}
     base = dense_allreduce(p, n)
     return {name: fn(p, n) / base for name, fn in SCHEMES.items()}
 
@@ -177,14 +311,47 @@ def worst_case_profile(M: int, density: float, vw: int = 1) -> SparsityProfile:
         M=M, d=lambda i: min(1.0, max(i, 1) * density), s=lambda n: 1.0, vw=vw)
 
 
+def choose_plan(
+    p: SparsityProfile, topo: Topology, *, threshold: float = 1.0
+) -> CommPlan:
+    """argmin of the α-β plan times over the candidate set, biased toward
+    dense: a non-dense plan wins only when its time beats the all-dense
+    plan by ``threshold`` (ties resolve to dense via candidate order).
+    This is where densify-after-intra-aggregation falls out: when the
+    merged density ``d(n_intra)`` crosses the dense/sparse break-even on
+    the inter links, ``hier(zen@intra, dense@inter)`` (or all-dense)
+    times below ``hier(zen@intra, zen@inter)`` and wins."""
+    cands = candidate_plans(topo, p.M)
+    times = {pl.tag(): plan_time(pl, p, topo) for pl in cands}
+    dense_tag = cands[0].tag()
+    best = min(cands, key=lambda pl: times[pl.tag()])
+    if times[best.tag()] >= threshold * times[dense_tag]:
+        return cands[0]
+    return best
+
+
 def choose_scheme(
-    p: SparsityProfile, n: int, *, threshold: float = 1.0
+    p: SparsityProfile, n: "int | Topology", *, threshold: float = 1.0
 ) -> str:
     """Per-tensor scheme choice from a (measured or worst-case) profile:
     'zen' iff its wire volume beats dense ring allreduce by ``threshold``.
     This is the decision the bucket planner applies tensor-by-tensor —
     scheme='auto' is per-leaf, never global (a high-density table falls
-    back to dense without dragging genuinely sparse tables with it)."""
+    back to dense without dragging genuinely sparse tables with it).
+
+    With an ``int`` (or the degenerate flat topology) the decision is the
+    historical volume comparison, bit-identical.  With a two-level
+    ``Topology`` the returned tag is the α-β-optimal CommPlan's
+    (``choose_plan``), e.g. ``hier(zen@intra,dense@inter)``."""
+    if isinstance(n, Topology):
+        topo = n
+        if not topo.flat:
+            return choose_plan(p, topo, threshold=threshold).tag()
+        lvl = topo.intra
+        if lvl.size < 2:
+            return "dense"
+        return ("zen" if stage_time("zen", p, lvl)
+                < threshold * stage_time("dense", p, lvl) else "dense")
     if n < 2:
         return "dense"  # single worker: nothing to sync, dense psum is free
     return "zen" if zen(p, n) < threshold * dense_allreduce(p, n) else "dense"

@@ -49,17 +49,36 @@ from repro.core.hashing import (
 
 
 class SyncStats(NamedTuple):
-    """Per-worker accounting: wire words sent and capacity overflows."""
+    """Per-worker accounting: wire words sent and capacity overflows.
+
+    ``by_level`` tags wire words by topology level for hierarchical plans
+    (fastest level first — ``(intra_words, inter_words)`` for a two-level
+    plan); flat schemes leave it empty, meaning "all words at level 0".
+    """
 
     sent_words: jnp.ndarray  # f32 scalar
     overflow: jnp.ndarray    # i32 scalar (total dropped non-zeros)
+    by_level: tuple = ()     # per-level f32 wire words (hier plans only)
 
 
 def _axis_size(axis: str) -> int:
-    """Size of a named axis, on jax versions with or without lax.axis_size."""
+    """Size of a named axis as a static python int — axis sizing must
+    never emit a collective.
+
+    ``lax.axis_size`` (newer jax) is the public spelling.  On the pinned
+    0.4.x CI leg it does not exist; there ``jax.core.axis_frame(axis)``
+    resolves the size from the trace-time axis env (returning either the
+    int itself or a frame carrying ``.size``, depending on the release).
+    ``psum(1, axis)`` stays as the last-resort fallback — jax folds a
+    non-tracer operand statically, so even that path is collective-free,
+    which tests/test_hier_schemes.py asserts on lowered HLO."""
     if hasattr(lax, "axis_size"):
         return lax.axis_size(axis)
-    return lax.psum(1, axis)
+    try:
+        frame = jax.core.axis_frame(axis)
+        return int(getattr(frame, "size", frame))
+    except Exception:
+        return lax.psum(1, axis)
 
 
 def _nnz(idx: jnp.ndarray) -> jnp.ndarray:
@@ -414,7 +433,15 @@ def zen_commit(
     """Zen stages 2-4: push all_to_all, server aggregation, bitmap pull.
 
     ``dense`` supplies only the output shape/dtype (no data dependency —
-    every transmitted value already lives in ``enc``)."""
+    every transmitted value already lives in ``enc``).
+
+    Push, aggregate, and pull all run over ``axis``: a named axis and its
+    ``layout`` (sized ``layout.n == axis size``) are one unit.  In a
+    hierarchical CommPlan each *stage* brings its own (axis, layout)
+    pair, which is how a plan's pull ends up on a different axis than an
+    earlier stage's push — there is no valid cross-axis pull *within*
+    one zen instance (another axis names a different worker set, whose
+    servers hold different partitions)."""
     lo = layout
     n = lo.n
     vw = _vwidth(dense)
@@ -514,6 +541,77 @@ def zen_sync(
 
 
 # ---------------------------------------------------------------------------
+# CommPlan execution: per-stage dispatch + the hierarchical composer
+# ---------------------------------------------------------------------------
+
+def stage_sync(
+    scheme: str, dense: jnp.ndarray, *, axis: str, n: int,
+    capacity: int | None = None, layout: ZenLayout | None = None,
+    use_hash_bitmap: bool = True, backend: str = "xla",
+    interpret: bool | None = None, block: int = 8,
+    cap_push: int | None = None, cap_pull: int | None = None,
+) -> tuple[jnp.ndarray, SyncStats]:
+    """Run one scheme over one named axis — the uniform entry the
+    CommPlan interpreter (``hier_sync``) and the bucket committer
+    (``core/zen.py``) dispatch through.  Capacity knobs are the caller's:
+    a stage after an intra merge must provision for the *merged* density
+    (``costmodel.merged_profile``), not the per-worker one."""
+    if scheme == "dense":
+        return dense_sync(dense, axis=axis)
+    if scheme == "zen":
+        if layout is None:
+            raise ValueError("stage_sync: scheme='zen' needs a layout")
+        return zen_sync(dense, axis=axis, layout=layout,
+                        use_hash_bitmap=use_hash_bitmap,
+                        backend=backend, interpret=interpret)
+    if scheme == "agsparse":
+        return agsparse_sync(dense, axis=axis, capacity=capacity)
+    if scheme == "sparcml":
+        return sparcml_sync(dense, axis=axis, n=n, capacity=capacity)
+    if scheme == "sparse_ps":
+        return sparse_ps_sync(dense, axis=axis, n=n,
+                              cap_push=cap_push or capacity,
+                              cap_pull=cap_pull or capacity)
+    if scheme == "omnireduce":
+        return omnireduce_sync(dense, axis=axis, n=n, block=block,
+                               cap_push=cap_push or capacity,
+                               cap_pull=cap_pull or capacity)
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def hier_sync(
+    dense: jnp.ndarray, *, topology, plan, stage_kw: dict | None = None,
+) -> tuple[jnp.ndarray, SyncStats]:
+    """Execute a CommPlan over a Topology: stage 0 aggregates over the
+    fast (intra) axis, stage 1 runs on the *intra-aggregated* gradient
+    over the slow (inter) axis.  Exact by associativity of the sum.
+
+    ``stage_kw`` maps level index -> extra kwargs for that stage's
+    ``stage_sync`` call (capacity, layout, backend, ...).  Size-1 levels
+    are skipped (free identity) and report zero wire words.  Returns the
+    SUM over all ``topology.n`` workers (same convention as every flat
+    ``*_sync``) with ``SyncStats.by_level`` carrying the per-level wire
+    split the inter-volume regression gate tracks."""
+    stage_kw = stage_kw or {}
+    g = dense
+    sent = jnp.float32(0)
+    overflow = jnp.int32(0)
+    by_level = []
+    for stage in plan.stages:
+        lvl = topology.levels[stage.level]
+        if lvl.size <= 1:
+            by_level.append(jnp.float32(0))
+            continue
+        g, st = stage_sync(stage.scheme, g, axis=lvl.axis, n=lvl.size,
+                           **stage_kw.get(stage.level, {}))
+        sent = sent + st.sent_words
+        overflow = overflow + st.overflow
+        by_level.append(st.sent_words)
+    return g, SyncStats(sent_words=sent, overflow=overflow,
+                        by_level=tuple(by_level))
+
+
+# ---------------------------------------------------------------------------
 # Registry + single-device simulation helper
 # ---------------------------------------------------------------------------
 
@@ -526,3 +624,25 @@ def simulate(fn, per_worker_dense: jnp.ndarray, **kwargs):
     Returns (aggregated [n, M(, d)] — identical rows, SyncStats batched)."""
     f = functools.partial(fn, axis=AXIS, **kwargs)
     return jax.vmap(f, axis_name=AXIS)(per_worker_dense)
+
+
+def simulate_hier(per_worker_dense: jnp.ndarray, *, topology, plan,
+                  stage_kw: dict | None = None, fn=None):
+    """Single-device simulation of a hierarchical plan: [n, M(, d)] worker
+    gradients nested-vmapped as [n_inter, n_intra, M(, d)] with one named
+    axis per topology level (workers of a node are CONSECUTIVE rows —
+    the same contiguous grouping ``launch/mesh.py`` builds).
+
+    ``fn`` overrides the per-worker function (default: ``hier_sync`` of
+    ``plan``); it receives the local dense gradient only."""
+    topo = topology
+    if fn is None:
+        fn = functools.partial(hier_sync, topology=topo, plan=plan,
+                               stage_kw=stage_kw)
+    n_intra, n_inter = topo.intra.size, topo.inter.size
+    per = per_worker_dense.reshape(
+        n_inter, n_intra, *per_worker_dense.shape[1:])
+    g = jax.vmap(jax.vmap(fn, axis_name=topo.intra.axis),
+                 axis_name=topo.inter.axis)(per)
+    return jax.tree.map(
+        lambda x: x.reshape(n_inter * n_intra, *x.shape[2:]), g)

@@ -233,13 +233,20 @@ class DensityController:
         *,
         ema: float = 0.8,
         threshold: float = 1.0,
+        topology=None,
     ):
         """``bucket_sizes``/``schemes``: per compressed-bucket key (from
         ``GradSync.compressed_buckets()``).  ``n`` is the sync world size;
-        ``threshold`` mirrors ``SyncConfig.auto_threshold``."""
+        ``threshold`` mirrors ``SyncConfig.auto_threshold``.  On a
+        hierarchical topology pass ``topology=gradsync.topology`` so the
+        re-run decision uses the same α-β plan space (and plan tags) as
+        the live bucket plan — an int-``n`` controller would recommend
+        flat tags that never match ``hier(...)`` schemes and replan
+        forever."""
         self.sizes = dict(bucket_sizes)
         self.current = dict(schemes)
         self.n = max(n, 2)
+        self.topology = topology
         self.ema = float(ema)
         self.threshold = float(threshold)
         self._d1: dict[str, float] = {}
@@ -272,11 +279,14 @@ class DensityController:
 
     def schemes(self) -> dict[str, str]:
         """choose_scheme on the measured profile per bucket; buckets with
-        no observations yet keep their current scheme."""
+        no observations yet keep their current scheme.  With a topology
+        the recommendations are CommPlan tags (flat topologies included —
+        the degenerate one reproduces the int-n picks exactly)."""
         out = dict(self.current)
+        target = self.topology if self.topology is not None else self.n
         for key, prof in self.profiles().items():
             out[key] = costmodel.choose_scheme(
-                prof, self.n, threshold=self.threshold)
+                prof, target, threshold=self.threshold)
         return out
 
     def drifted(self) -> dict[str, tuple[str, str]]:

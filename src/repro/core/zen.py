@@ -8,6 +8,14 @@ selectable sparse scheme over the data axis; everything else is a plain
 intra-pod sparse sync (paper §4.1 does the same with NVLink-intra /
 network-inter).
 
+Since the topology refactor (DESIGN.md §10) the data-parallel world itself
+may be hierarchical: a two-level ``core/topology.py`` Topology (built from
+``--node-size``) resolves every bucket to a **CommPlan** — e.g.
+``hier(zen@dp_intra, agsparse@dp_inter)`` — whose stages run fastest level
+first with capacities grown across the intra-merge boundary, and whose
+stage 0 rides in its own fenced slot of the overlap schedule.  The flat
+(degenerate) topology reproduces the single-axis stack bit-exactly.
+
 Since the bucketed-scheduler refactor (DESIGN.md §7) the pytree is first
 partitioned into fixed-byte buckets (``repro.core.buckets``): dense leaves
 fuse into flat psum buckets, row-sparse leaves stay whole, and the per-bucket
@@ -24,6 +32,7 @@ profile) through ``costmodel.choose_scheme``.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any
 
 import jax
@@ -32,7 +41,9 @@ from jax import lax
 
 from repro.core import buckets as bk
 from repro.core import costmodel, schemes, sparsify
+from repro.core import topology as tpg
 from repro.core.schemes import SyncStats, ZenLayout, make_zen_layout
+from repro.core.topology import CommPlan, Topology, resolve_plan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +71,12 @@ class SyncConfig:
     # buckets of at most this many bytes and emit per-bucket sync ops
     # double-buffered.  None = monolithic per-leaf path (bit-exact PR-1).
     bucket_bytes: int | None = None
+    # α-β link-parameter override for the topology cost model
+    # (DESIGN.md §10): 'a_intra,b_intra,a_inter,b_inter' in (µs, µs/word),
+    # or 'a,b' for every level.  None = the core/topology.py defaults.
+    # Only consulted when the trainer builds a hierarchical topology
+    # (--node-size > 1); the flat cost model is volume-only (degenerate).
+    alpha_beta: str | None = None
     # Error-feedback sparsification of dense buckets (DESIGN.md §8): a
     # core/sparsify.py spec string — 'topk:0.01', 'randk:0.05',
     # 'threshold:1e-3', optional ':noef' suffix — or 'none'.  Compressed
@@ -97,19 +114,39 @@ class GradSync:
         data_axis: str = "data",
         pod_axis: str | None = None,
         profiles: dict[str, costmodel.SparsityProfile] | None = None,
+        topology: Topology | None = None,
     ):
         self.cfg = cfg
         self.data_axis = data_axis
         self.pod_axis = pod_axis
         self.n_data = n_data
+        # The flat degenerate topology reproduces the pre-topology stack
+        # bit-exactly (α=0, β=1: time == volume, one level over data_axis)
+        self.topology = (topology if topology is not None
+                         else tpg.flat_topology(n_data, axis=data_axis))
+        if self.topology.n != n_data:
+            raise ValueError(
+                f"topology covers {self.topology.n} workers "
+                f"({self.topology.describe()}) but n_data={n_data}")
+        if self.topology.flat and self.topology.intra.axis != data_axis:
+            raise ValueError(
+                f"flat topology axis {self.topology.intra.axis!r} != "
+                f"data_axis {data_axis!r}")
         self.sparse_paths = tuple(sparse_paths)
         self.compress = sparsify.parse_compress(cfg.compress)
-        self._layouts: dict[str, ZenLayout] = {}
+        self._layouts: dict[tuple[str, int], ZenLayout] = {}
         profiles = profiles or {}
+        topo = self.topology
+
+        def auto_target():
+            """What 'auto' hands to choose_scheme: the historical int
+            world size on flat topologies (bit-identical picks), the
+            α-β topology when hierarchical (plan tags)."""
+            return max(n_data, 2) if topo.flat else topo
 
         def resolve_scheme(name: str, leaf) -> str:
-            """Per-tensor scheme for one row-sparse leaf (bucket planner
-            callback).  'auto' consults the leaf's own profile."""
+            """Per-tensor plan tag for one row-sparse leaf (bucket
+            planner callback).  'auto' consults the leaf's own profile."""
             if len(leaf.shape) > 2:
                 raise ValueError(
                     f"sparse leaf {name} must be 2-D, got {leaf.shape}")
@@ -122,11 +159,11 @@ class GradSync:
                 prof = costmodel.worst_case_profile(
                     rows, cfg.density_budget, vw=max(d, 1))
             return costmodel.choose_scheme(
-                prof, max(n_data, 2), threshold=cfg.auto_threshold)
+                prof, auto_target(), threshold=cfg.auto_threshold)
 
         def resolve_compressed(key: str, size: int) -> str:
-            """Scheme for one EF-compressed dense bucket: 'auto' runs the
-            cost model on the measured profile when one is available
+            """Plan tag for one EF-compressed dense bucket: 'auto' runs
+            the cost model on the measured profile when one is available
             (the DensityController feedback loop), else on the configured
             keep-density's worst case."""
             if cfg.scheme != "auto":
@@ -135,30 +172,53 @@ class GradSync:
             if prof is None:
                 prof = sparsify.compress_profile(self.compress, size)
             return costmodel.choose_scheme(
-                prof, max(n_data, 2), threshold=cfg.auto_threshold)
+                prof, auto_target(), threshold=cfg.auto_threshold)
 
         self.plan = bk.make_bucket_plan(
             grad_shapes, self._is_sparse, cfg.bucket_bytes, resolve_scheme,
             compress=self.compress.tag(),
             compressed_scheme=resolve_compressed)
+        # per-bucket executable CommPlans + per-(bucket, level) layouts
+        self._plans: dict[int, CommPlan] = {
+            b.bid: resolve_plan(b.scheme, topo) for b in self.plan.buckets}
         for b in self.plan.buckets:
-            if b.scheme != "zen":
-                continue
+            cplan = self._plans[b.bid]
             if b.kind == bk.SPARSE:
                 slot = b.slots[0]
                 rows = slot.shape[0] if len(slot.shape) >= 1 else 1
                 budget = cfg.density_budget
-            else:  # compressed dense bucket: flat element-sparse payload
+            elif b.compress != "none":
+                # compressed dense bucket: flat element-sparse payload
                 rows = b.size
                 budget = self._compressed_budget()
-            self._layouts[b.key] = make_zen_layout(
-                rows, n_data,
-                density_budget=budget, key=cfg.seed,
-                k=cfg.k, r1_factor=cfg.r1_factor, r2_ratio=cfg.r2_ratio,
-            )
+            else:
+                continue  # plain dense psum bucket: no sparse buffers
+            for stage in cplan.stages:
+                lvl = topo.levels[stage.level]
+                if stage.scheme != "zen" or lvl.size <= 1:
+                    continue
+                self._layouts[b.key, stage.level] = make_zen_layout(
+                    rows, lvl.size,
+                    density_budget=self._level_budget(budget, stage.level),
+                    key=cfg.seed,
+                    k=cfg.k, r1_factor=cfg.r1_factor, r2_ratio=cfg.r2_ratio,
+                )
 
     def _is_sparse(self, name: str) -> bool:
         return any(s in name for s in self.sparse_paths)
+
+    def _level_budget(self, budget: float, level: int) -> float:
+        """Capacity budget for a stage at ``level``: stages after the
+        intra merge provision for the worst-case merged density
+        (``n_intra`` non-overlapping workers' non-zeros in one tensor) —
+        the capacity-growth boundary semantics of DESIGN.md §10.  The
+        overflow counters surface genuine violations as always (§2).
+        Level 0 passes the configured budget through untouched (the flat
+        path must stay byte-identical to the pre-topology stack)."""
+        if level == 0:
+            return budget
+        grow = math.prod(lv.size for lv in self.topology.levels[:level])
+        return min(1.0, budget * grow)
 
     def _compressed_budget(self) -> float:
         """Capacity budget for compressed buckets: 4x the configured
@@ -185,6 +245,24 @@ class GradSync:
         return {b.key: b.scheme for b in self.plan.buckets
                 if b.compress != "none"}
 
+    def describe(self) -> list[str]:
+        """One human-readable line per bucket: the resolved CommPlan
+        (tag expanded over the topology), kind, size, and compressor —
+        what ``launch/train.py --node-size``/``dryrun.py`` print so the
+        plan a run executes is visible, not inferred."""
+        lines = [f"topology: {self.topology.describe()}"]
+        for b in self.plan.buckets:
+            cplan = self._plans[b.bid]
+            stages = " ; ".join(
+                f"{s.scheme}@{self.topology.levels[s.level].axis}"
+                f"[{self.topology.levels[s.level].size}]"
+                for s in cplan.stages)
+            comp = "" if b.compress == "none" else f" compress={b.compress}"
+            lines.append(
+                f"bucket {b.bid:3d} {b.kind:11s} {b.nbytes:>10d}B "
+                f"plan=[{stages}]{comp}  {b.key}")
+        return lines
+
     def init_residual(self) -> dict:
         """Zero EF residual memory (one f32 vector per compressed bucket;
         empty when EF is off — plain lossy compression keeps no state)."""
@@ -195,60 +273,101 @@ class GradSync:
 
     # -- per-bucket sync ------------------------------------------------------
 
+    def _stage_kwargs(self, bucket: bk.Bucket, scheme: str,
+                      level: int) -> dict:
+        """``schemes.stage_sync`` kwargs for one plan stage of one bucket:
+        capacities grow with the merged density after earlier levels."""
+        cfg = self.cfg
+        capd = (self._compressed_budget() if bucket.compress != "none"
+                else cfg.density_budget)
+        rows = (bucket.slots[0].shape[0] if bucket.kind == bk.SPARSE
+                else bucket.size)
+        cap = max(64, int(rows * self._level_budget(capd, level)))
+        kw = dict(
+            capacity=cap, layout=self._layouts.get((bucket.key, level)),
+            use_hash_bitmap=cfg.use_hash_bitmap, backend=cfg.backend,
+        )
+        if scheme == "omnireduce":
+            blk = 8
+            nb = max(8, cap // blk)
+            kw.update(block=blk, cap_push=nb, cap_pull=nb)
+        return kw
+
     def _encode_bucket(self, bucket: bk.Bucket, payload: jnp.ndarray):
         """Local, collective-free stage (overlappable with the previous
-        bucket's wire time).  Zen buckets encode to (indices, values);
-        everything else passes through.  For compressed buckets the
-        payload arriving here is already EF-sparsified (the schedule's
-        compress hook runs in the same pipeline slot)."""
-        if bucket.scheme == "zen":
+        bucket's wire time).  Buckets whose FIRST plan stage is Zen
+        encode to (indices, values); everything else passes through.
+        For compressed buckets the payload arriving here is already
+        EF-sparsified (the schedule's compress hook runs in the same
+        pipeline slot)."""
+        stage0 = self._plans[bucket.bid].stages[0]
+        if (stage0.scheme == "zen"
+                and self.topology.levels[0].size > 1):
             enc = schemes.zen_encode(
-                payload, layout=self._layouts[bucket.key],
+                payload, layout=self._layouts[bucket.key, 0],
                 backend=self.cfg.backend)
             return (payload, enc)
         return (payload,)
 
+    def _run_stage(self, bucket: bk.Bucket, level: int, g, enc=None):
+        """Execute one plan stage; ``enc`` carries the prefetched
+        ZenEncoded for stage 0 (the overlap schedule's contract)."""
+        cplan = self._plans[bucket.bid]
+        stage = cplan.stages[level]
+        lvl = self.topology.levels[level]
+        if lvl.size <= 1:
+            return g, SyncStats(sent_words=jnp.float32(0),
+                                overflow=jnp.int32(0))
+        if stage.scheme == "zen" and enc is not None:
+            return schemes.zen_commit(
+                enc, g, axis=lvl.axis,
+                layout=self._layouts[bucket.key, level],
+                use_hash_bitmap=self.cfg.use_hash_bitmap,
+                backend=self.cfg.backend)
+        if (bucket.kind == bk.DENSE and bucket.compress == "none"
+                and stage.scheme == "dense"):
+            # fused flat psum (no mean here: one division at the end)
+            out = lax.psum(g, lvl.axis)
+            words = jnp.float32(2 * (lvl.size - 1) / lvl.size) * g.size
+            return out, SyncStats(sent_words=words, overflow=jnp.int32(0))
+        kw = self._stage_kwargs(bucket, stage.scheme, level)
+        return schemes.stage_sync(stage.scheme, g, axis=lvl.axis,
+                                  n=lvl.size, **kw)
+
+    def _intra_bucket(self, bucket: bk.Bucket, enc):
+        """Hierarchical stage 0: aggregate over the fast (intra) axis.
+        Only wired into the schedule on two-level topologies — the
+        pipeline fences it against the next bucket's encode so the cheap
+        hop hides under compute (train/schedule.py)."""
+        g = enc[0]
+        zen_enc = enc[1] if len(enc) > 1 else None
+        g1, st = self._run_stage(bucket, 0, g, enc=zen_enc)
+        return (g1, st)
+
     def _commit_bucket(
         self, bucket: bk.Bucket, enc
     ) -> tuple[jnp.ndarray, SyncStats]:
-        """Collective + decode-apply stage for one bucket.  Dispatch is by
-        *scheme*: an uncompressed dense bucket is a fused psum; a
-        compressed dense bucket goes through the sparse schemes on its
-        flat (element-sparse) payload exactly like a row-sparse leaf."""
-        cfg, ax, n = self.cfg, self.data_axis, self.n_data
-        g = enc[0]
-        if bucket.kind == bk.DENSE and bucket.scheme == "dense":
-            out = lax.psum(g, ax) / n
-            words = jnp.float32(2 * (n - 1) / n) * g.size
-            st = SyncStats(sent_words=words, overflow=jnp.int32(0))
+        """Collective + decode-apply stage for one bucket.  Dispatch is
+        by the bucket's CommPlan: an uncompressed dense bucket is a fused
+        psum (per level); a compressed dense bucket goes through the
+        sparse schemes on its flat (element-sparse) payload exactly like
+        a row-sparse leaf.  On flat topologies this is the whole sync; on
+        two-level topologies ``_intra_bucket`` already ran stage 0 and
+        ``enc`` is ``(intra-aggregated payload, stage-0 stats)``."""
+        n = self.n_data
+        if self.topology.flat:
+            g = enc[0]
+            zen_enc = enc[1] if len(enc) > 1 else None
+            out, st = self._run_stage(bucket, 0, g, enc=zen_enc)
+            out = out / n  # mean-reduce convention (all schemes SUM)
         else:
-            name = bucket.key
-            capd = (self._compressed_budget() if bucket.compress != "none"
-                    else cfg.density_budget)
-            cap = max(64, int(g.shape[0] * capd))
-            if bucket.scheme == "zen":
-                out, st = schemes.zen_commit(
-                    enc[1], g, axis=ax, layout=self._layouts[name],
-                    use_hash_bitmap=cfg.use_hash_bitmap,
-                    backend=cfg.backend)
-            elif bucket.scheme == "agsparse":
-                out, st = schemes.agsparse_sync(g, axis=ax, capacity=cap)
-            elif bucket.scheme == "sparcml":
-                out, st = schemes.sparcml_sync(g, axis=ax, n=n, capacity=cap)
-            elif bucket.scheme == "sparse_ps":
-                # imbalanced: needs skew headroom (cap is per-partition)
-                out, st = schemes.sparse_ps_sync(
-                    g, axis=ax, n=n, cap_push=cap, cap_pull=cap)
-            elif bucket.scheme == "omnireduce":
-                blk = 8
-                nb = max(8, cap // blk)
-                out, st = schemes.omnireduce_sync(
-                    g, axis=ax, n=n, block=blk, cap_push=nb, cap_pull=nb)
-            elif bucket.scheme == "dense":
-                out, st = schemes.dense_sync(g, axis=ax)
-            else:
-                raise ValueError(f"unknown scheme {bucket.scheme}")
-            out = out / n  # mean-reduce convention (matches psum/n above)
+            g_mid, st0 = enc
+            out, st1 = self._run_stage(bucket, 1, g_mid)
+            st = SyncStats(
+                sent_words=st0.sent_words + st1.sent_words,
+                overflow=st0.overflow + st1.overflow,
+                by_level=(st0.sent_words, st1.sent_words))
+            out = out / n
         if self.pod_axis is not None:
             out = lax.pmean(out, self.pod_axis)
         return out, st
@@ -307,7 +426,8 @@ class GradSync:
         payloads = [bk.gather_bucket(b, flat) for b in self.plan.buckets]
         outs, per_bucket = schedule.run_schedule(
             self.plan.buckets, payloads,
-            self._encode_bucket, self._commit_bucket, compress=compress_fn)
+            self._encode_bucket, self._commit_bucket, compress=compress_fn,
+            intra=None if self.topology.flat else self._intra_bucket)
         synced_flat = list(flat)
         for b, out in zip(self.plan.buckets, outs):
             if b.compress != "none":

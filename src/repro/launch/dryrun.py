@@ -18,7 +18,6 @@ import numpy as np   # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.configs import ALL_ARCHS, INPUT_SHAPES, get_config  # noqa: E402
-from repro.data.pipeline import make_batch_specs  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.train import steps as st  # noqa: E402
 from repro.train.build import (  # noqa: E402
@@ -30,7 +29,8 @@ def dryrun_combo(arch: str, shape: str, multi_pod: bool,
                  sync_scheme: str = "zen", pad_heads: bool = False,
                  fused_attn: bool = False, moe_a2a: bool = False,
                  bucket_bytes: int | None = None,
-                 compress: str = "none") -> dict:
+                 compress: str = "none", node_size: int = 1,
+                 alpha_beta: str | None = None) -> dict:
     """Lower + compile one (arch, input-shape, mesh) combination.
 
     Returns the record for EXPERIMENTS.md §Dry-run / §Roofline.
@@ -38,22 +38,28 @@ def dryrun_combo(arch: str, shape: str, multi_pod: bool,
     ``bucket_bytes`` compiles the bucketed overlap schedule (DESIGN.md §7)
     so its collective count/bytes land in the record; ``compress``
     compiles the EF sparsification stack (DESIGN.md §8, e.g. 'topk:0.01')
-    so induced-sparsity wire volumes are measurable on the production mesh.
+    so induced-sparsity wire volumes are measurable on the production
+    mesh; ``node_size`` compiles the hierarchical two-level sync
+    (DESIGN.md §10 — the data axis splits into (dp_inter, dp_intra) and
+    every bucket runs its CommPlan, so per-level collective bytes land in
+    the record).
     """
     from repro.core.zen import SyncConfig
 
     cfg = get_config(arch)
     spec = INPUT_SHAPES[shape]
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod, node_size=node_size)
     t0 = time.time()
     prog = build_program(cfg, mesh, TrainerConfig(
         sync=SyncConfig(scheme=sync_scheme, bucket_bytes=bucket_bytes,
-                        compress=compress)),
+                        compress=compress, alpha_beta=alpha_beta)),
         pad_heads=pad_heads, moe_a2a=moe_a2a)
     mode = spec["mode"]
 
     if mode == "train":
         attach_train(prog, spec["seq_len"], spec["global_batch"])
+        for line in prog.gradsync.describe():
+            print(f"  {line}", flush=True)
         ospecs_abs = st.abstract_opt_state(prog.tcfg, prog.param_shapes,
                                            prog.model.ctx, prog.param_specs,
                                            gradsync=prog.gradsync)
@@ -132,6 +138,16 @@ def main():
                          "(DESIGN.md §8), e.g. 'topk:0.01', 'randk:0.05', "
                          "'threshold:1e-3', ':noef' suffix disables error "
                          "feedback; default: none")
+    ap.add_argument("--node-size", type=int, default=1,
+                    help="devices per node (DESIGN.md §10): compile the "
+                         "hierarchical two-level sync — the data axis "
+                         "splits into (dp_inter, dp_intra) and each "
+                         "bucket's CommPlan aggregates intra-node before "
+                         "crossing the inter-node links")
+    ap.add_argument("--alpha-beta", default=None,
+                    help="α-β link override for the topology cost model "
+                         "('a_intra,b_intra,a_inter,b_inter' in µs, "
+                         "µs/word)")
     ap.add_argument("--pad-heads", action="store_true",
                     help="§Perf: pad+shard replicated attention heads")
     ap.add_argument("--fused-attn", action="store_true",
@@ -167,7 +183,9 @@ def main():
                                        fused_attn=args.fused_attn,
                                        moe_a2a=args.moe_a2a,
                                        bucket_bytes=args.bucket_bytes,
-                                       compress=args.compress)
+                                       compress=args.compress,
+                                       node_size=args.node_size,
+                                       alpha_beta=args.alpha_beta)
                     fp.write_text(json.dumps(rec, indent=1))
                     print(f"OK   {tag}: compile={rec['compile_s']}s "
                           f"flops/dev={rec['flops_per_device']:.3e} "

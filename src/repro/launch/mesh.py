@@ -2,26 +2,60 @@
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state (device count is locked at first use).
+
+Hierarchical data parallelism (DESIGN.md §10): ``node_size > 1`` splits
+the ``data`` mesh dimension into nested ``(dp_inter, dp_intra)`` axes —
+``dp_intra`` ranks are CONSECUTIVE devices (the contiguous grouping that
+maps to a physical host/node under the default device order), so
+intra-node collectives stay on fast links.  The sync stack plans against
+the matching ``core/topology.py`` Topology; everything else (ZeRO, batch
+sharding) just sees two nested axes instead of one.
 """
 from __future__ import annotations
 
 import jax
 
+from repro.core.topology import DP_INTER, DP_INTRA
 
-def make_production_mesh(*, multi_pod: bool = False):
+
+def split_node_axes(shape, axes, node_size: int = 1):
+    """Split the ``data`` dim of a (shape, axes) mesh description into
+    nested ``(dp_inter, dp_intra)`` dims.  ``node_size == 1`` returns the
+    description unchanged (the flat world keeps its single data axis)."""
+    shape, axes = tuple(shape), tuple(axes)
+    if node_size <= 1:
+        return shape, axes
+    if "data" not in axes:
+        raise ValueError(f"node_size={node_size} needs a 'data' axis to "
+                         f"split, got axes={axes}")
+    i = axes.index("data")
+    dp = shape[i]
+    if dp % node_size != 0:
+        raise ValueError(
+            f"node_size={node_size} does not divide the data axis "
+            f"(size {dp}); pick a divisor of {dp}")
+    return (shape[:i] + (dp // node_size, node_size) + shape[i + 1:],
+            axes[:i] + (DP_INTER, DP_INTRA) + axes[i + 1:])
+
+
+def make_production_mesh(*, multi_pod: bool = False, node_size: int = 1):
     """v5e production mesh: 16x16 = 256 chips per pod; 2 pods = 512 chips.
 
     Axes: ``data`` (batch / ZeRO) x ``model`` (tensor/expert parallel),
     plus ``pod`` (data-parallel across pods) in the multi-pod mesh.
+    ``node_size`` splits ``data`` into ``(dp_inter, dp_intra)``.
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return jax.make_mesh(*split_node_axes(shape, axes, node_size))
 
 
-def make_mesh(shape, axes):
-    """Arbitrary mesh (tests / examples), e.g. ((1, 1), ('data', 'model'))."""
-    return jax.make_mesh(tuple(shape), tuple(axes))
+def make_mesh(shape, axes, node_size: int = 1):
+    """Arbitrary mesh (tests / examples), e.g. ((1, 1), ('data', 'model')).
+
+    ``node_size > 1`` splits the ``data`` dim into ``(dp_inter,
+    dp_intra)`` — devices of one node are consecutive."""
+    return jax.make_mesh(*split_node_axes(shape, axes, node_size))
 
 
 def mesh_axis_sizes(mesh) -> dict:

@@ -48,6 +48,19 @@ def main():
     ap.add_argument("--bucket-bytes", type=int, default=None,
                     help="bucketed overlap schedule: fuse dense grads into "
                          "buckets of at most this many bytes (DESIGN.md §7)")
+    ap.add_argument("--node-size", type=int, default=1,
+                    help="devices per node (DESIGN.md §10): splits the "
+                         "data axis into nested (dp_inter, dp_intra) mesh "
+                         "axes and plans per-bucket two-level CommPlans "
+                         "(aggregate intra-node, then cross the slow "
+                         "links); must divide the data-parallel degree; "
+                         "1 = flat (bit-identical to the pre-topology "
+                         "trainer)")
+    ap.add_argument("--alpha-beta", default=None,
+                    help="α-β link override for the topology cost model: "
+                         "'a_intra,b_intra,a_inter,b_inter' (µs, µs per "
+                         "f32 word) or 'a,b' for every level; default: "
+                         "core/topology.py's ICI/DCN-class constants")
     ap.add_argument("--compress", default="none",
                     help="EF-sparsify dense gradient buckets before sync "
                          "(DESIGN.md §8): 'topk:0.01', 'randk:0.05', "
@@ -72,17 +85,19 @@ def main():
 
     dims = [int(x) for x in args.mesh.split("x")]
     axes = ("pod", "data", "model")[-len(dims):]
-    # eager §9 validation: reject a tp that does not divide the config
-    # (clear error naming the config) BEFORE jax allocates the mesh
+    # eager §9/§10 validation: reject a tp or node_size that does not
+    # divide the config (clear error naming the config) BEFORE jax
+    # allocates the mesh
     pods, dp, tp = ([1] * (3 - len(dims)) + dims)
-    make_ctx(cfg, tp, dp, pods)
-    mesh = make_mesh(tuple(dims), axes)
+    make_ctx(cfg, tp, dp, pods, node_size=args.node_size)
+    mesh = make_mesh(tuple(dims), axes, node_size=args.node_size)
     tcfg = TrainerConfig(
         opt=OptConfig(lr=args.lr),
         sync=SyncConfig(scheme=args.sync,
                         density_budget=args.density_budget,
                         bucket_bytes=args.bucket_bytes,
-                        compress=args.compress),
+                        compress=args.compress,
+                        alpha_beta=args.alpha_beta),
         zero1=not args.no_zero1)
     prog = build_program(cfg, mesh, tcfg)
     attach_train(prog, args.seq_len, args.global_batch)
@@ -90,17 +105,29 @@ def main():
     opt = prog.init_opt(params)
     n_params = sum(p.size for p in jax.tree.leaves(params))
     print(f"arch={cfg.name} params={n_params / 1e6:.1f}M mesh={args.mesh} "
-          f"sync={args.sync} compress={args.compress}")
+          f"sync={args.sync} compress={args.compress} "
+          f"node_size={args.node_size}")
+    # the plan a run executes is printed, not inferred (DESIGN.md §10)
+    for line in prog.gradsync.describe():
+        print(f"  {line}")
 
     # adaptive density control (DESIGN.md §8): measured post-compression
-    # densities feed choose_scheme; a dense<->zen flip triggers a replan
+    # densities feed choose_scheme; a dense<->zen flip triggers a replan.
+    # Only under scheme='auto': with an explicit scheme the resolver
+    # ignores recommendations, so a disagreeing controller would flag
+    # drift (and recompile) every interval without ever converging.
     controller = None
-    if args.replan_every and prog.gradsync.has_compression:
+    if (args.replan_every and prog.gradsync.has_compression
+            and args.sync == "auto"):
         controller = DensityController(
             prog.gradsync.compressed_buckets(),
             prog.gradsync.bucket_schemes(),
             n=prog.model.ctx.dp,
-            threshold=tcfg.sync.auto_threshold)
+            threshold=tcfg.sync.auto_threshold,
+            # hier plans live in the topology's tag space; flat keeps the
+            # historical int-n decision (bit-identical picks)
+            topology=(None if prog.gradsync.topology.flat
+                      else prog.gradsync.topology))
 
     data = iter(SyntheticLM(cfg, DataConfig(
         seq_len=args.seq_len, batch=args.global_batch, seed=args.seed)))

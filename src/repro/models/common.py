@@ -211,6 +211,13 @@ class ShardCtx:
     tp_axis: str = "model"
     dp_axis: str = "data"
     pod_axis: Optional[str] = None
+    # Hierarchical data parallelism (DESIGN.md §10): devices per node.
+    # node_size > 1 splits the data axis into nested mesh axes
+    # ("dp_inter", "dp_intra") — see ``dp_axes`` — so the sync stack can
+    # aggregate within a node before crossing the slow inter-node links.
+    # node_size == 1 keeps the single historical "data" axis: every
+    # consumer sees exactly the pre-topology axis names and sizes.
+    node_size: int = 1
     shard_heads: bool = True       # q-heads over tp (set from cfg)
     decode_seq_shard: bool = True  # KV cache sequence-sharded over tp
     # §Perf optimization: pad q-heads up to a tp multiple so attention can
@@ -224,8 +231,35 @@ class ShardCtx:
     moe_a2a: bool = False
 
     @property
+    def dp_axes(self) -> tuple:
+        """Mesh axes spanning the data-parallel world, outermost first:
+        the single ``dp_axis`` when flat, ``(dp_inter, dp_intra)`` when
+        node-split.  Collectives that must cover ALL data ranks (ZeRO
+        gathers, metric pmeans) take this tuple as their axis name."""
+        if self.node_size > 1:
+            from repro.core.topology import DP_INTER, DP_INTRA
+            return (DP_INTER, DP_INTRA)
+        return (self.dp_axis,)
+
+    @property
     def batch_axes(self):
-        return (self.pod_axis, self.dp_axis) if self.pod_axis else (self.dp_axis,)
+        head = (self.pod_axis,) if self.pod_axis else ()
+        return head + self.dp_axes
+
+    @property
+    def axis_sizes(self) -> dict:
+        """{mesh axis name: size} for every axis this ctx shards over —
+        the one table spec-divisor math should consult (steps.py)."""
+        sizes = {self.tp_axis: self.tp}
+        if self.node_size > 1:
+            from repro.core.topology import DP_INTER, DP_INTRA
+            sizes[DP_INTER] = self.dp // self.node_size
+            sizes[DP_INTRA] = self.node_size
+        else:
+            sizes[self.dp_axis] = self.dp
+        if self.pod_axis:
+            sizes[self.pod_axis] = self.pods
+        return sizes
 
     def tp_rank(self):
         return lax.axis_index(self.tp_axis)
@@ -303,19 +337,26 @@ def validate_tp(cfg: ArchConfig, tp: int, *, shard_heads: bool,
 
 
 def make_ctx(cfg: ArchConfig, tp: int, dp: int, pods: int = 1,
-             pad_heads: bool = False, moe_a2a: bool = False) -> ShardCtx:
+             pad_heads: bool = False, moe_a2a: bool = False,
+             node_size: int = 1) -> ShardCtx:
     h_pad = 0
     shard = cfg.n_heads % tp == 0
     if pad_heads and not shard and cfg.n_heads > 0:
         h_pad = pad_to(cfg.n_heads, tp)
         shard = True
     validate_tp(cfg, tp, shard_heads=shard, h_pad=h_pad)
+    if node_size > 1:
+        _require(dp % node_size == 0, cfg,
+                 f"node_size={node_size} does not divide the data-parallel "
+                 f"degree dp={dp}; pick a node size dividing {dp} (or 1 "
+                 f"for the flat topology)")
     return ShardCtx(
         tp=tp, dp=dp, pods=pods,
         pod_axis="pod" if pods > 1 else None,
         shard_heads=shard,
         h_pad=h_pad,
         moe_a2a=moe_a2a,
+        node_size=max(node_size, 1),
     )
 
 

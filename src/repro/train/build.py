@@ -99,11 +99,18 @@ def build_program(cfg: ArchConfig, mesh: Mesh,
                   tcfg: TrainerConfig | None = None,
                   pad_heads: bool = False,
                   moe_a2a: bool = False) -> Program:
+    from repro.core.topology import DP_INTER, DP_INTRA
+
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     tp = sizes.get("model", 1)
-    dp = sizes.get("data", 1)
     pods = sizes.get("pod", 1)
-    ctx = make_ctx(cfg, tp, dp, pods, pad_heads=pad_heads, moe_a2a=moe_a2a)
+    # a node-split mesh (launch/mesh.py --node-size) carries the data
+    # parallelism as nested (dp_inter, dp_intra) axes; the ctx keeps dp as
+    # the TOTAL data degree and records the node grouping separately
+    node_size = sizes.get(DP_INTRA, 1)
+    dp = sizes.get("data", 1) * sizes.get(DP_INTER, 1) * node_size
+    ctx = make_ctx(cfg, tp, dp, pods, pad_heads=pad_heads, moe_a2a=moe_a2a,
+                   node_size=node_size)
     model = build_model(cfg, ctx)
     shapes, specs = model.abstract()
     # hard contract (DESIGN.md §9): the global param pytree must not depend

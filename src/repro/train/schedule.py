@@ -54,6 +54,7 @@ def run_schedule(
     encode: Callable[[Bucket, Any], Any],
     commit: Callable[[Bucket, Any], tuple[Any, SyncStats]],
     compress: Callable[[Bucket, Any], Any] | None = None,
+    intra: Callable[[Bucket, Any], Any] | None = None,
 ) -> tuple[list[Any], list[SyncStats]]:
     """Emit the double-buffered per-bucket sync pipeline.
 
@@ -64,6 +65,15 @@ def run_schedule(
     the wire, and the fence covers the whole compress+encode prefetch.
     Residual-memory updates are the caller's side channel (GradSync keeps
     them per bucket); the schedule only sees the transformed payload.
+
+    ``intra``, when given, is the hierarchical topology's fast-level
+    stage (DESIGN.md §10): ``intra(bucket, enc) -> enc'`` runs bucket
+    *i*'s intra-node collective between the encode fence and the commit,
+    and a second fence ties ``(intra(i), encode(i+1))`` together — so the
+    cheap intra hop of bucket *i* hides under bucket *i+1*'s encode
+    compute exactly like the slow commit hides under it, instead of
+    serializing in front of it.  ``intra=None`` (flat topology) emits
+    op-for-op the historical two-stage pipeline.
 
     Returns (synced payloads, per-bucket SyncStats), both in bucket order.
     """
@@ -86,6 +96,13 @@ def run_schedule(
             # value-identity fence: bucket i+1's encode must be materialized
             # before bucket i's commit results are consumed (double buffer).
             enc, nxt = _fence((enc, nxt))
+        if intra is not None:
+            enc = intra(b, enc)
+            if nxt is not None:
+                # fence the intra stage of bucket i against encode(i+1):
+                # the fast hop must not sink past the prefetch it is
+                # supposed to overlap with.
+                enc, nxt = _fence((enc, nxt))
         outs[i], stats[i] = commit(b, enc)
         enc = nxt
     return outs, stats

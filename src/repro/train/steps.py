@@ -69,7 +69,12 @@ def batch_pspecs(batch_shapes: dict, ctx: ShardCtx, n_batch_shards: int) -> dict
 
 
 def zero_axes(ctx: ShardCtx):
-    return (("pod", "data") if ctx.pod_axis else ("data",))
+    """Mesh axes the ZeRO-1 state shards over: every data-parallel axis
+    (plus pod).  Flat: ("data",); node-split: ("dp_inter", "dp_intra") —
+    jax collectives take the tuple as one flattened axis, so the ZeRO
+    math is topology-agnostic."""
+    head = (ctx.pod_axis,) if ctx.pod_axis else ()
+    return head + ctx.dp_axes
 
 
 def _zero_world(ctx: ShardCtx) -> int:
@@ -86,12 +91,12 @@ def opt_chunk_size(local_size: int, world: int) -> int:
 
 def _shard_divisor(spec: P, ctx: ShardCtx) -> int:
     div = 1
+    sizes = ctx.axis_sizes
     for ax in spec:
         if ax is None:
             continue
         for a in (ax if isinstance(ax, tuple) else (ax,)):
-            div *= {"model": ctx.tp, "data": ctx.dp,
-                    "pod": ctx.pods}.get(a, 1)
+            div *= sizes.get(a, 1)
     return div
 
 
@@ -105,7 +110,7 @@ def _device_world(ctx: ShardCtx) -> int:
 def residual_axes(ctx: ShardCtx) -> tuple:
     """Mesh axes, in mesh order, that shard the residual's dim0."""
     head = (ctx.pod_axis,) if ctx.pod_axis else ()
-    return head + (ctx.dp_axis, ctx.tp_axis)
+    return head + ctx.dp_axes + (ctx.tp_axis,)
 
 
 def init_opt_state(tcfg: TrainerConfig, params, ctx: ShardCtx, param_specs,
@@ -191,6 +196,8 @@ def _residual_struct(gradsync, ctx: ShardCtx):
 
 def local_param_shapes(param_shapes, param_specs, ctx: ShardCtx):
     """Global ShapeDtypeStructs -> per-device (shard_map-local) shapes."""
+    sizes = ctx.axis_sizes
+
     def leaf(sds, spec):
         shape = list(sds.shape)
         for i, ax in enumerate(spec):
@@ -199,8 +206,7 @@ def local_param_shapes(param_shapes, param_specs, ctx: ShardCtx):
             axs = ax if isinstance(ax, tuple) else (ax,)
             div = 1
             for a in axs:
-                div *= {"model": ctx.tp, "data": ctx.dp,
-                        "pod": ctx.pods}.get(a, 1)
+                div *= sizes.get(a, 1)
             shape[i] = shape[i] // div
         return jax.ShapeDtypeStruct(tuple(shape), sds.dtype)
 
@@ -212,15 +218,22 @@ def make_gradsync(model: Model, tcfg: TrainerConfig, param_specs,
                   param_shapes=None, sparsity_profiles=None) -> GradSync:
     """Build the trainer's GradSync OFFLINE (hash layouts, bucket plan,
     compressor tags) from the local (per-device) grad shapes — grads
-    match param shards inside shard_map."""
+    match param shards inside shard_map.  The data-parallel Topology
+    comes from the ctx's node grouping (``--node-size``) with the sync
+    config's α-β override; node_size == 1 builds the degenerate flat
+    topology (bit-identical to the pre-topology trainer)."""
+    from repro.core.topology import build_topology
+
     ctx = model.ctx
     if param_shapes is None:
         param_shapes = model.abstract()[0]
     grad_shapes = local_param_shapes(param_shapes, param_specs, ctx)
+    topo = build_topology(ctx.dp, ctx.node_size, axis=ctx.dp_axis,
+                          alpha_beta=tcfg.sync.alpha_beta)
     return GradSync(
         tcfg.sync, list(model.sparse_paths), grad_shapes, ctx.dp,
         data_axis=ctx.dp_axis, pod_axis=ctx.pod_axis,
-        profiles=sparsity_profiles)
+        profiles=sparsity_profiles, topology=topo)
 
 
 def make_train_step(model: Model, tcfg: TrainerConfig, param_specs,

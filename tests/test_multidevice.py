@@ -34,13 +34,15 @@ PRELUDE = textwrap.dedent("""
     from repro.core.zen import SyncConfig
     from repro.data.pipeline import SyntheticLM, DataConfig
 
-    def run(arch, mesh_shape, scheme, steps=2, compress="none"):
+    def run(arch, mesh_shape, scheme, steps=2, compress="none",
+            node_size=1):
         # capacity_factor high enough that no tokens drop: MoE drop
         # boundaries legitimately depend on per-shard capacity, which
         # would otherwise differ across mesh shapes
         cfg = dataclasses.replace(get_config(arch).reduced(),
                                   dtype=jnp.float32, capacity_factor=4.0)
-        mesh = make_mesh(mesh_shape, ("data", "model"))
+        mesh = make_mesh(mesh_shape, ("data", "model"),
+                         node_size=node_size)
         prog = build_program(cfg, mesh,
                              TrainerConfig(sync=SyncConfig(
                                  scheme=scheme, compress=compress,
@@ -202,6 +204,61 @@ WORKER_SYNC = PRELUDE + textwrap.dedent("""
 """)
 
 
+# --- hierarchical topology (DESIGN.md §10) ----------------------------------
+# node_size splits dp into (dp_inter, dp_intra); hierarchical runs must
+# match the flat run's trajectory: the two-level plan changes WHERE bytes
+# move, never what is aggregated.  Fast subset (tier-1): (8,1) at
+# node_size=2, dense + zen.  Full matrix (CI hierarchical leg,
+# REPRO_HIER=full): meshes {(1,1),(8,1),(2,4)} x node_size {1,2,4} with
+# non-dividing combos asserted to fail fast in make_ctx.
+HIER_LIB = PRELUDE + textwrap.dedent("""
+    def check_hier(arch, mesh, schemes, node_sizes, steps=3, tol=1e-3):
+        dp = mesh[0]
+        for scheme in schemes:
+            flat, flat_m = run(arch, mesh, scheme, steps=steps)
+            assert all(np.isfinite(x) for x in flat), (arch, scheme, flat)
+            for ns in node_sizes:
+                if ns <= 1:
+                    continue
+                if dp % ns != 0:
+                    # invalid grouping must fail fast with a config error
+                    try:
+                        run(arch, mesh, scheme, steps=1, node_size=ns)
+                    except ValueError as e:
+                        assert "node_size" in str(e), e
+                        print("REJECTED", arch, mesh, ns)
+                        continue
+                    raise AssertionError(
+                        f"node_size={ns} should not divide dp={dp}")
+                ls, m = run(arch, mesh, scheme, steps=steps, node_size=ns)
+                d0, dN = abs(ls[0] - flat[0]), abs(ls[-1] - flat[-1])
+                assert d0 < tol, ("step-0", arch, scheme, ns, ls, flat)
+                assert dN < tol, ("step-N", arch, scheme, ns, ls, flat)
+                assert m["sync/overflow"] == 0, m
+                if ns < dp:   # >1 node: the per-level split must surface
+                    assert "sync/inter_words" in m, sorted(m)
+                    assert m["sync/inter_words"] > 0, m
+                print("HIER_PARITY", arch, mesh, scheme, "ns=%d" % ns,
+                      "d0=%.2e dN=%.2e inter=%.0f" % (
+                          d0, dN, m.get("sync/inter_words", -1)))
+""")
+
+WORKER_HIER_FAST = HIER_LIB + textwrap.dedent("""
+    check_hier("qwen2-0.5b", (8, 1), ["dense", "zen"], [2])
+    print("ALL_OK")
+""")
+
+HIER_MATRIX = [("qwen2-0.5b", (8, 1)), ("qwen2-0.5b", (2, 4)),
+               ("qwen2-0.5b", (1, 1))]
+
+
+def _hier_matrix_worker(arch: str, mesh) -> str:
+    return HIER_LIB + textwrap.dedent(f"""
+        check_hier({arch!r}, {mesh!r}, ["dense", "zen", "auto"], [1, 2, 4])
+        print("ALL_OK")
+    """)
+
+
 def _run_worker(script: str) -> None:
     env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
     r = subprocess.run([sys.executable, "-c", script], env=env,
@@ -240,3 +297,24 @@ def test_sync_schemes_on_mesh():
     """zen == dense at dp=4 and MoE a2a == replicated — hard assertions;
     a zen fast-path regression on a real mesh must fail, not xfail."""
     _run_worker(WORKER_SYNC)
+
+
+@pytest.mark.slow
+def test_hierarchical_sync_on_mesh():
+    """Hierarchical (node-split) sync == flat sync on a real 8-device
+    mesh, loss-parity hard assertion (fast subset; the full
+    mesh x node_size matrix runs via ``make test-hier``)."""
+    _run_worker(WORKER_HIER_FAST)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,mesh", HIER_MATRIX,
+                         ids=lambda v: str(v).replace(" ", ""))
+def test_hierarchical_parity_matrix(arch, mesh):
+    """Full §10 invariance matrix: meshes {(1,1),(8,1),(2,4)} x
+    node_size {1,2,4} x {dense, zen, auto}, non-dividing combos rejected
+    with config-named errors.  Runs when REPRO_HIER=full
+    (``make test-hier``, wired into the CI multidevice job)."""
+    if os.environ.get("REPRO_HIER") != "full":
+        pytest.skip("full hierarchical matrix runs via `make test-hier`")
+    _run_worker(_hier_matrix_worker(arch, mesh))

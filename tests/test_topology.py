@@ -1,0 +1,242 @@
+"""CommPlan IR + α-β topology cost model (DESIGN.md §10).
+
+The contracts under test:
+  * plan-tag grammar round-trips; flat tags are bare scheme names
+    (bucket identity survives the IR refactor);
+  * the DEGENERATE flat topology (α=0, β=1) reproduces the int-``n``
+    cost model bit-exactly — times, picks, lower bound;
+  * cost-model consistency properties over random profiles:
+    ``lower_bound <= min(normalized_times)`` and ``choose_scheme`` /
+    ``choose_plan`` are the argmin of the published times (flat AND
+    hierarchical);
+  * densify-after-intra-aggregation: when the merged density crosses the
+    dense/sparse break-even on the inter links, the planner stops
+    picking a sparse inter stage.
+"""
+import math
+
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import costmodel as cm
+from repro.core import topology as tp
+
+
+# ---------------------------------------------------------------------------
+# IR
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tag", [
+    "zen", "dense", "agsparse", "sparcml",
+    "hier(zen@intra,agsparse@inter)",
+    "hier(dense@intra,sparcml@inter)",
+    "hier(zen@intra,dense@inter)",
+])
+def test_plan_tag_round_trip(tag):
+    assert tp.parse_plan(tag).tag() == tag
+
+
+@pytest.mark.parametrize("bad", [
+    "hier(zen@inter,agsparse@intra)",   # roles out of order
+    "hier(zen@intra)",                  # missing inter role
+    "zen@intra",                        # role without hier()
+    "hier(zen@intra,agsparse@inter",    # unbalanced
+])
+def test_malformed_plan_tags_rejected(bad):
+    with pytest.raises(ValueError):
+        tp.parse_plan(bad)
+
+
+def test_flat_plan_tag_is_bare_scheme():
+    assert tp.flat_plan("zen").tag() == "zen"
+    assert tp.resolve_plan("zen", tp.flat_topology(8)).stages[0].scheme == "zen"
+
+
+def test_bare_tag_expands_per_level_on_hier_topology():
+    topo = tp.build_topology(8, 4)
+    plan = tp.resolve_plan("zen", topo)
+    assert [s.scheme for s in plan.stages] == ["zen", "zen"]
+    assert plan.tag() == "hier(zen@intra,zen@inter)"
+
+
+def test_build_topology():
+    flat = tp.build_topology(8, 1)
+    assert flat.flat and flat.n == 8 and flat.intra.axis == "data"
+    assert flat.intra.alpha == 0.0 and flat.intra.beta == 1.0  # degenerate
+    hier = tp.build_topology(8, 2)
+    assert not hier.flat and hier.n == 8
+    assert hier.intra.size == 2 and hier.inter.size == 4
+    assert hier.axes == (tp.DP_INTRA, tp.DP_INTER)
+    single = tp.build_topology(8, 8)   # one node: size-1 (free) inter level
+    assert single.inter.size == 1 and single.n == 8
+    with pytest.raises(ValueError, match="does not divide"):
+        tp.build_topology(8, 3)
+
+
+def test_parse_alpha_beta():
+    kw = tp.parse_alpha_beta("1,2,3,4")
+    assert kw == dict(alpha_intra=1.0, beta_intra=2.0,
+                      alpha_inter=3.0, beta_inter=4.0)
+    kw2 = tp.parse_alpha_beta("5,6")
+    assert kw2["alpha_inter"] == 5.0 and kw2["beta_intra"] == 6.0
+    assert tp.parse_alpha_beta(None) == {}
+    with pytest.raises(ValueError):
+        tp.parse_alpha_beta("1,2,3")
+    topo = tp.build_topology(8, 2, alpha_beta="1,2,3,4")
+    assert topo.intra.alpha == 1.0 and topo.inter.beta == 4.0
+
+
+# ---------------------------------------------------------------------------
+# random profiles (union-bound-consistent: monotone, concave-ish,
+# d(i) <= i * d(1) — what measured densification curves satisfy)
+# ---------------------------------------------------------------------------
+
+def _profile(m_log2: int, d1: float, gamma: float, skew: float):
+    M = 1 << m_log2
+    block = 256
+
+    def d(i):
+        return min(1.0, d1 * max(i, 1) ** gamma)
+
+    def s(k):
+        return 1.0 + skew * math.log2(max(k, 1))
+
+    return cm.SparsityProfile(
+        M=M, d=d, s=s, block=block,
+        block_density=lambda i: min(1.0, d(i) * block),
+        block_max=lambda i, parts: min(1.0, d(i) * block * s(parts)),
+    )
+
+
+PROFILE_ST = st.tuples(
+    st.integers(10, 22),                            # log2 M
+    st.floats(1e-4, 0.9),                           # d(1)
+    st.floats(0.05, 1.0),                           # densification exponent
+    st.floats(0.0, 2.0),                            # skew growth
+)
+
+
+@settings(deadline=None, max_examples=30)
+@given(PROFILE_ST, st.sampled_from([2, 4, 8, 16, 64]))
+def test_lower_bound_floors_all_schemes_flat(args, n):
+    p = _profile(*args)
+    t = cm.normalized_times(p, n)
+    floor = t.pop("lower_bound")
+    assert floor <= min(t.values()) * (1 + 1e-9), (floor, t)
+
+
+@settings(deadline=None, max_examples=30)
+@given(PROFILE_ST, st.sampled_from([2, 4, 8, 16, 64]))
+def test_choose_scheme_is_argmin_flat(args, n):
+    """choose_scheme == argmin of the published normalized times over its
+    decision set {dense, zen} (ties resolve dense)."""
+    p = _profile(*args)
+    t = cm.normalized_times(p, n)
+    want = "zen" if t["zen"] < t["dense"] else "dense"
+    assert cm.choose_scheme(p, n) == want
+    assert cm.choose_scheme(p, tp.flat_topology(n)) == want
+
+
+@settings(deadline=None, max_examples=30)
+@given(PROFILE_ST, st.sampled_from([(2, 2), (2, 4), (4, 2), (4, 8)]))
+def test_lower_bound_floors_all_plans_hier(args, shape):
+    n_intra, n_inter = shape
+    p = _profile(*args)
+    topo = tp.two_level_topology(n_intra, n_inter)
+    t = cm.plan_times(p, topo)
+    floor = t.pop("lower_bound")
+    assert floor <= min(t.values()) * (1 + 1e-9), (floor, t)
+
+
+@settings(deadline=None, max_examples=30)
+@given(PROFILE_ST, st.sampled_from([(2, 2), (2, 4), (4, 2), (4, 8)]))
+def test_choose_plan_is_argmin_hier(args, shape):
+    n_intra, n_inter = shape
+    p = _profile(*args)
+    topo = tp.two_level_topology(n_intra, n_inter)
+    t = cm.plan_times(p, topo)
+    t.pop("lower_bound")
+    best_tag = min(t, key=t.get)
+    picked = cm.choose_plan(p, topo)
+    assert t[picked.tag()] <= t[best_tag] * (1 + 1e-12)
+    assert cm.choose_scheme(p, topo) == picked.tag()
+
+
+# ---------------------------------------------------------------------------
+# degenerate-topology exactness + the int overloads
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=20)
+@given(PROFILE_ST, st.sampled_from([2, 4, 8, 16]))
+def test_degenerate_topology_is_bit_identical(args, n):
+    """flat_topology(n) with α=0, β=1 must reproduce the int-n cost model
+    EXACTLY — same float values, same picks, same floor."""
+    p = _profile(*args)
+    topo = tp.flat_topology(n)
+    assert cm.normalized_times(p, topo) == cm.normalized_times(p, n)
+    assert cm.choose_scheme(p, topo) == cm.choose_scheme(p, n)
+    lb_topo = cm.lower_bound(p, topo)
+    assert lb_topo == cm.lower_bound(p, n)
+
+
+def test_merged_profile_boundary_semantics():
+    """The inter stage sees per-node density d(n_intra) as its d(1) —
+    the capacity-growth boundary of the intra merge."""
+    p = _profile(14, 0.01, 0.8, 0.5)
+    m = cm.merged_profile(p, 4)
+    assert m.d(1) == p.d(4)
+    assert m.d(2) == p.d(8)
+    assert m.M == p.M and m.vw == p.vw
+    assert cm.merged_profile(p, 1) is p
+
+
+def test_densify_after_intra_when_merged_density_crosses_break_even():
+    """High enough d(1): the merged density saturates after the intra
+    merge and the planner must densify the inter stage (pick a dense
+    inter scheme) — while a genuinely sparse profile keeps a sparse
+    inter stage."""
+    topo = tp.two_level_topology(4, 8)
+    dense_ish = _profile(20, 0.4, 1.0, 0.0)    # d(4) == 1.0: saturated
+    plan = cm.choose_plan(dense_ish, topo)
+    assert plan.scheme_at(1) == "dense", plan.tag()
+    sparse = _profile(20, 0.001, 0.3, 0.0)     # d stays ~0.1% merged
+    plan_s = cm.choose_plan(sparse, topo)
+    assert plan_s.scheme_at(1) != "dense", plan_s.tag()
+
+
+def test_stage_time_alpha_beta_terms():
+    """time = α·rounds + β·words, size-1 levels are free."""
+    p = _profile(14, 0.05, 0.8, 0.0)
+    lvl = tp.Level(axis="x", size=8, alpha=7.0, beta=3.0)
+    t = cm.stage_time("dense", p, lvl)
+    want = 7.0 * 2 * (8 - 1) + 3.0 * cm.dense_allreduce(p, 8)
+    assert t == pytest.approx(want, rel=1e-12)
+    free = tp.Level(axis="x", size=1, alpha=7.0, beta=3.0)
+    assert cm.stage_time("dense", p, free) == 0.0
+
+
+def test_split_node_axes():
+    """launch/mesh.py splits the data dim into (dp_inter, dp_intra) with
+    intra-node ranks consecutive; node_size=1 is the identity."""
+    from repro.launch.mesh import split_node_axes
+
+    shape, axes = split_node_axes((8, 2), ("data", "model"), 4)
+    assert shape == (2, 4, 2)
+    assert axes == (tp.DP_INTER, tp.DP_INTRA, "model")
+    assert split_node_axes((8, 2), ("data", "model"), 1) == \
+        ((8, 2), ("data", "model"))
+    shape_p, axes_p = split_node_axes((2, 8, 2), ("pod", "data", "model"), 2)
+    assert shape_p == (2, 4, 2, 2)
+    assert axes_p == ("pod", tp.DP_INTER, tp.DP_INTRA, "model")
+    with pytest.raises(ValueError, match="node_size"):
+        split_node_axes((8, 2), ("data", "model"), 3)
+    with pytest.raises(ValueError, match="data"):
+        split_node_axes((8,), ("model",), 2)
+
+
+def test_sparcml_only_offered_at_pow2_levels():
+    p = _profile(14, 0.01, 0.5, 0.0)
+    topo = tp.two_level_topology(3, 8)   # non-pow2 intra
+    tags = set(cm.plan_times(p, topo))
+    assert not any(t.startswith("hier(sparcml@intra") for t in tags)
+    assert any("sparcml@inter" in t for t in tags)
