@@ -29,7 +29,12 @@ committed the baseline), and each entry is judged against that scale:
 * ``bucketed_e2e`` entries are gated on the within-run bucketed/mono
   **ratio** instead of wall time — the overlap win is a paired A/B
   measurement, so judging it cross-run would re-import exactly the host
-  drift the pairing removes.
+  drift the pairing removes;
+* ``encode_fused`` entries are likewise gated on the fresh run's
+  within-run fused/unfused ratio, against the ABSOLUTE acceptance bar
+  (fused <= 0.5x the 3-dispatch encode at density <= 0.01, DESIGN.md
+  §11) rather than the baseline's ratio — the bar is the PR's
+  contract, not a trajectory.
 
 Only wall-time is gated with a tolerance.  Wire volumes (``sent_words``
 and friends) are deterministic, so any drift there is compared exactly
@@ -51,6 +56,7 @@ import sys
 
 VOLUME_KEYS = ("sent_words", "dense_words", "overflow", "intra_words", "inter_words")
 JITTER_US = 500.0  # below this, wall time on shared hosts is pure jitter
+ENCODE_FUSED_BAR = 0.5  # fused <= 0.5x the 3-dispatch encode at d<=0.01
 
 
 def _index(payload: dict) -> dict:
@@ -96,6 +102,31 @@ def _gate_bucketed_pairs(base: dict, new: dict, tolerance: float) -> list:
     return out
 
 
+def _gate_encode_fused(new: dict) -> list:
+    """Gate the fused-encode win on the fresh run's within-run
+    fused/unfused ratio against the absolute acceptance bar (DESIGN.md
+    §11): fused must cost at most ``ENCODE_FUSED_BAR`` of the 3-dispatch
+    encode at density <= 0.01 on the bench's host mesh.  Judged per run
+    (both arms share one time_ab noise window), never cross-run."""
+    pairs: dict = {}
+    for r in new.values():
+        if r.get("stage") != "encode_fused":
+            continue
+        pairs.setdefault(r.get("density"), {})[r.get("arm")] = r["us"]
+    out = []
+    for density in sorted(pairs, key=str):
+        arms = pairs[density]
+        if "fused" not in arms or not arms.get("unfused"):
+            continue
+        ratio = arms["fused"] / arms["unfused"]
+        if density is not None and density <= 0.01 and ratio > ENCODE_FUSED_BAR:
+            out.append(
+                f"encode fused/unfused[d={density}]: {ratio:.2f} > "
+                f"{ENCODE_FUSED_BAR} (fusion win lost)"
+            )
+    return out
+
+
 def compare(
     baseline: dict, fresh: dict, tolerance: float, min_us: float = 30000.0
 ) -> int:
@@ -118,7 +149,7 @@ def compare(
             if key in base[name] and base[name][key] != new[name].get(key):
                 drift = f"{base[name][key]} -> {new[name].get(key)}"
                 volume_drift.append(f"{name}.{key}: {drift}")
-        if new[name].get("stage") == "bucketed_e2e":
+        if new[name].get("stage") in ("bucketed_e2e", "encode_fused"):
             continue  # wall time gated pairwise below, not cross-run
         if b_us < JITTER_US:
             # sub-0.5ms: observed swinging >3x on idle hosts; report only
@@ -134,6 +165,7 @@ def compare(
         elif rel < 1 - tolerance:
             improvements.append(line)
     regressions += _gate_bucketed_pairs(base, new, tolerance)
+    regressions += _gate_encode_fused(new)
     tol_pct = f"{tolerance:.0%}"
     print(f"bench gate: {len(shared)} entries compared, tolerance {tol_pct}")
     print(f"  host-speed scale (median new/baseline ratio): {scale:.2f}x")

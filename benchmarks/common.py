@@ -134,6 +134,31 @@ def build_gradsync_run(sync_cfg, shapes, grads, n_workers: int):
     return run, stats, gs.plan
 
 
+# ---------------------------------------------------------------------------
+# per-stage timing registry (benchmarks/run.py "stages" report field)
+# ---------------------------------------------------------------------------
+
+# module name -> {series label -> {stage name -> us}}.  Bench modules fill
+# this via record_stage_times; run.py attaches it to each module's JSON
+# entry so encode vs commit time survives into BENCH_sync.json instead of
+# being flattened into one wall-clock number.
+STAGE_TIMES: dict[str, dict] = {}
+
+
+def record_stage_times(module: str, series: str, **stages: float) -> None:
+    """Record per-stage wall times (us) for one benchmark series.
+
+    ``stages`` are stage-name -> microseconds pairs (e.g. ``encode_us=...,
+    commit_us=...``).  Repeated calls for the same (module, series) keep
+    the minimum per stage — matching ``time_fn``'s least-contended-
+    observation estimator across --repeat rounds."""
+    mod = STAGE_TIMES.setdefault(module, {})
+    prev = mod.setdefault(series, {})
+    for name, us in stages.items():
+        val = float(us)
+        prev[name] = min(prev[name], val) if name in prev else val
+
+
 def time_ab(fns: dict, *args, rounds: int = 30, warmup: int = 3) -> dict:
     """Interleaved A/B timing on a noisy shared host.
 

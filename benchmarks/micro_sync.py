@@ -30,6 +30,7 @@ import numpy as np
 from benchmarks.common import (
     build_gradsync_run,
     emit,
+    record_stage_times,
     synthetic_grad_tree,
     time_ab,
     time_fn,
@@ -136,12 +137,26 @@ def bench_end_to_end(results: list, densities=DENSITIES) -> None:
         run = jax.jit(functools.partial(
             schemes.simulate, fn, **kwargs))
         out, stats = run(vals)
+        e2e_us = time_fn(run, vals)
         _record(
-            results, name, time_fn(run, vals),
+            results, name, e2e_us,
             stage="e2e", scheme=scheme, density=density, backend=backend,
             sent_words=float(np.asarray(stats.sent_words).mean()),
             overflow=int(np.asarray(stats.overflow).sum()),
         )
+        if scheme == "zen":
+            # per-stage split (DESIGN.md §11): the local encode prefix in
+            # isolation; single-device simulate runs N encodes serially,
+            # so the commit remainder is e2e - N * encode.  Lands in the
+            # run.py JSON "stages" field instead of being flattened into
+            # one wall-clock number.
+            enc = jax.jit(functools.partial(
+                schemes.zen_encode, layout=kwargs["layout"],
+                backend=backend, interpret=None))
+            enc_us = time_fn(enc, vals[0])
+            record_stage_times(
+                "micro_sync", name, encode_us=enc_us,
+                commit_us=max(e2e_us - N * enc_us, 0.0), e2e_us=e2e_us)
 
 
 def bench_bucketed(results: list, densities=DENSITIES) -> None:
@@ -243,6 +258,58 @@ def bench_hier(results: list, densities=HIER_DENSITIES) -> None:
              f"best_inter/flat_zen={best_inter / flat_words:.3f}")
 
 
+ENC_N = 8                        # the fused-encode gate's host mesh size
+ENC_DENSITIES = (0.01, 0.05)     # smoke keeps 0.01: the gate's bar
+ENC_RATIO_BAR = 0.5              # fused <= 0.5x the 3-dispatch at d<=0.01
+
+
+def bench_encode_fused(results: list, densities=ENC_DENSITIES) -> None:
+    """Fused single-dispatch encode vs the 3-dispatch chain (DESIGN.md
+    §11) on the 8-device host mesh.  Both arms compute the SAME function
+    — hash + insertion rounds + extraction + bitmap pack — so bit-exact
+    parity is asserted before timing and the wall-time ratio is purely
+    the fusion win.  The acceptance bar (fused <= 0.5x unfused at
+    d=0.01) is asserted here on every run AND gated pairwise by
+    check_regression (_gate_encode_fused); the two arms are recorded as
+    a pair from one time_ab noise window, like the bucketed series."""
+    from repro.kernels import ops as kops
+
+    for density in densities:
+        g = _workers(M, density)[0]
+        lo = schemes.make_zen_layout(
+            M, ENC_N, density_budget=min(0.5, 4 * density))
+        idx = jax.jit(
+            lambda x, c=lo.cap_index: compact_indices(x != 0, c)[0])(g)
+        seeds = lo.static_seeds()
+        fused = jax.jit(lambda i: kops.zen_encode_fused_op(
+            i, seeds, ENC_N, lo.r1, lo.r2))
+        unfused = jax.jit(lambda i: kops.zen_encode_unfused(
+            i, seeds, ENC_N, lo.r1, lo.r2))
+        a, b = fused(idx), unfused(idx)
+        for field, x, y in zip(("pidx", "occ", "overflow"), a, b):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), (
+                f"fused encode diverged from the 3-dispatch oracle "
+                f"({field}, d={density})")
+        times = time_ab({"fused": fused, "unfused": unfused}, idx,
+                        rounds=40)
+        for arm in ("fused", "unfused"):
+            _record(results, f"encode_fused[{arm},d={density}]",
+                    times[arm], stage="encode_fused", arm=arm,
+                    density=density, backend="pallas", n_workers=ENC_N)
+        ratio = times["fused"] / times["unfused"]
+        record_stage_times(
+            "micro_sync", f"encode_fused[d={density}]",
+            fused_us=times["fused"], unfused_us=times["unfused"])
+        emit(f"micro_sync/encode_fused_ratio[d={density}]", 0.0,
+             f"fused/unfused={ratio:.3f} bar<={ENC_RATIO_BAR} at d<=0.01")
+        if density <= 0.01:
+            assert ratio <= ENC_RATIO_BAR, (
+                f"fused encode is {ratio:.2f}x the 3-dispatch time at "
+                f"d={density} on the {ENC_N}-device host mesh — the "
+                f"megakernel must at least halve the encode "
+                f"(acceptance bar {ENC_RATIO_BAR})")
+
+
 COMPRESS_DENSITIES = (0.01, 0.05)  # smoke keeps 0.01: the acceptance bar
 
 
@@ -321,9 +388,16 @@ def main(argv=()) -> None:
     # the compress series keeps d=0.01 in BOTH modes: the <=10%-of-dense
     # acceptance assert must hold on every CI bench-gate run
     compress_densities = (0.01,) if args.smoke else COMPRESS_DENSITIES
+    # the encode series keeps d=0.01 in BOTH modes: the fused<=0.5x bar
+    # must hold on every CI bench-gate run
+    enc_densities = (0.01,) if args.smoke else ENC_DENSITIES
     repeat = args.repeat
+    # stages whose A/B entries are judged as within-run ratios: keep each
+    # (stage, density) pair from its least-contended replay as a unit, so
+    # the recorded ratio always comes from one time_ab noise window
+    paired_stages = ("bucketed_e2e", "encode_fused")
     best: dict[str, dict] = {}
-    pair_best: dict[float, tuple[float, list]] = {}
+    pair_best: dict[tuple, tuple[float, list]] = {}
     for _ in range(repeat):
         results: list[dict] = []
         bench_stages(results)
@@ -333,20 +407,22 @@ def main(argv=()) -> None:
         # bar must hold on every CI bench-gate run
         bench_hier(results)
         bench_compress(results, compress_densities)
+        bench_encode_fused(results, enc_densities)
         for r in results:
-            if r.get("stage") == "bucketed_e2e":
+            if r.get("stage") in paired_stages:
                 continue  # merged pairwise below
             if r["name"] not in best or r["us"] < best[r["name"]]["us"]:
                 best[r["name"]] = r
-        # bucketed A/B entries stay paired: keep each density's (mono,
-        # bucketed) pair from its least-contended replay as a unit, so the
-        # recorded ratio always comes from one time_ab noise window
-        for density in densities:
-            pair = [r for r in results if r.get("stage") == "bucketed_e2e"
-                    and r["density"] == density]
-            total = sum(r["us"] for r in pair)
-            if density not in pair_best or total < pair_best[density][0]:
-                pair_best[density] = (total, pair)
+        for stage in paired_stages:
+            stage_densities = sorted(
+                {r["density"] for r in results if r.get("stage") == stage})
+            for density in stage_densities:
+                pair = [r for r in results if r.get("stage") == stage
+                        and r["density"] == density]
+                total = sum(r["us"] for r in pair)
+                key = (stage, density)
+                if key not in pair_best or total < pair_best[key][0]:
+                    pair_best[key] = (total, pair)
     results = list(best.values()) + [
         r for _, pair in pair_best.values() for r in pair]
     payload = {

@@ -9,6 +9,11 @@ Run: ``PYTHONPATH=src python -m benchmarks.run [--json PATH] [module ...]``
 Exit code: non-zero iff any sub-benchmark failed — including one that
 calls ``sys.exit`` internally — so the CI bench gate can trust it.  The
 JSON report is written even when modules fail.
+
+Modules that call ``benchmarks.common.record_stage_times`` get a
+``stages`` field in their report entry — per-series stage timings (e.g.
+encode vs commit, DESIGN.md §11) instead of one flattened wall-clock
+number per module.
 """
 import argparse
 import importlib
@@ -88,7 +93,12 @@ def main() -> None:
             failures.append(name)
         us = (time.perf_counter() - t0) * 1e6
         print(f"bench/{name},{us:.0f},{status}", flush=True)
-        report.append({"module": name, "us": round(us, 1), "status": status})
+        entry = {"module": name, "us": round(us, 1), "status": status}
+        from benchmarks import common
+        stages = common.STAGE_TIMES.get(name)
+        if stages:
+            entry["stages"] = stages
+        report.append(entry)
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"bench": "run", "modules": report,

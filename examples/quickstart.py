@@ -17,6 +17,14 @@ bucket from the *measured* post-compression density (``--replan-every``
 closes that feedback loop during training).  Append ``:noef`` to see
 why the residual matters (benchmarks/fig14_accuracy.py quantifies it).
 
+The volume model prices the wire only; ``--calib-file PATH`` (on
+``launch/train.py`` / ``launch/dryrun.py``) additionally charges each
+scheme its *measured* encode time on this machine — run
+``PYTHONPATH=src python -m repro.core.costmodel --calib-file calib.json``
+once to produce the table (train.py auto-calibrates a missing file),
+and 'auto' will pick dense wherever encode cost eats the wire win
+(DESIGN.md §11).
+
 Run: PYTHONPATH=src python examples/quickstart.py
 """
 import jax

@@ -14,6 +14,7 @@ Conventions (matching Appendix B):
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
 from typing import Callable
 
@@ -312,7 +313,8 @@ def worst_case_profile(M: int, density: float, vw: int = 1) -> SparsityProfile:
 
 
 def choose_plan(
-    p: SparsityProfile, topo: Topology, *, threshold: float = 1.0
+    p: SparsityProfile, topo: Topology, *, threshold: float = 1.0,
+    calib: "CalibrationTable | None" = None,
 ) -> CommPlan:
     """argmin of the α-β plan times over the candidate set, biased toward
     dense: a non-dense plan wins only when its time beats the all-dense
@@ -320,9 +322,22 @@ def choose_plan(
     This is where densify-after-intra-aggregation falls out: when the
     merged density ``d(n_intra)`` crosses the dense/sparse break-even on
     the inter links, ``hier(zen@intra, dense@inter)`` (or all-dense)
-    times below ``hier(zen@intra, zen@inter)`` and wins."""
+    times below ``hier(zen@intra, zen@inter)`` and wins.
+
+    With a ``calib`` table (DESIGN.md §11) each candidate additionally
+    pays its *measured* per-stage encode overhead
+    (``plan_encode_overhead``); the identity table adds exactly 0.0, so
+    the decision degenerates bitwise to the analytic argmin
+    (tests/test_calibration.py property-tests this)."""
     cands = candidate_plans(topo, p.M)
-    times = {pl.tag(): plan_time(pl, p, topo) for pl in cands}
+
+    def t(pl: CommPlan) -> float:
+        tt = plan_time(pl, p, topo)
+        if calib is not None:
+            tt += plan_encode_overhead(calib, pl, p, topo)
+        return tt
+
+    times = {pl.tag(): t(pl) for pl in cands}
     dense_tag = cands[0].tag()
     best = min(cands, key=lambda pl: times[pl.tag()])
     if times[best.tag()] >= threshold * times[dense_tag]:
@@ -331,7 +346,8 @@ def choose_plan(
 
 
 def choose_scheme(
-    p: SparsityProfile, n: "int | Topology", *, threshold: float = 1.0
+    p: SparsityProfile, n: "int | Topology", *, threshold: float = 1.0,
+    calib: "CalibrationTable | None" = None,
 ) -> str:
     """Per-tensor scheme choice from a (measured or worst-case) profile:
     'zen' iff its wire volume beats dense ring allreduce by ``threshold``.
@@ -342,19 +358,38 @@ def choose_scheme(
     With an ``int`` (or the degenerate flat topology) the decision is the
     historical volume comparison, bit-identical.  With a two-level
     ``Topology`` the returned tag is the α-β-optimal CommPlan's
-    (``choose_plan``), e.g. ``hier(zen@intra,dense@inter)``."""
+    (``choose_plan``), e.g. ``hier(zen@intra,dense@inter)``.
+
+    ``calib`` adds measured per-stage encode overhead to each side of the
+    comparison (PacTrain-style: the decision reflects what the machine
+    does, not just the wire).  Encode cost only ever flips zen -> dense
+    (dense encodes for free), and ``calib=None`` / the identity table
+    keep the historical decision bit-identical."""
     if isinstance(n, Topology):
         topo = n
         if not topo.flat:
-            return choose_plan(p, topo, threshold=threshold).tag()
+            return choose_plan(p, topo, threshold=threshold,
+                               calib=calib).tag()
         lvl = topo.intra
         if lvl.size < 2:
             return "dense"
-        return ("zen" if stage_time("zen", p, lvl)
-                < threshold * stage_time("dense", p, lvl) else "dense")
+        zt = stage_time("zen", p, lvl)
+        dt = stage_time("dense", p, lvl)
+        if calib is not None:
+            zt += calib.encode_us("zen", p.M * p.vw, p.d(1))
+            dt += calib.encode_us("dense", p.M * p.vw, p.d(1))
+        return "zen" if zt < threshold * dt else "dense"
     if n < 2:
         return "dense"  # single worker: nothing to sync, dense psum is free
-    return "zen" if zen(p, n) < threshold * dense_allreduce(p, n) else "dense"
+    z, de = zen(p, n), dense_allreduce(p, n)
+    if calib is not None:
+        # words -> µs at the measured dense rate, then add measured encode
+        # overhead; beta > 0 and identity (beta=1, encode=0) preserve the
+        # analytic order/threshold exactly.
+        b = calib.beta_us_per_word(p.M * p.vw)
+        z = z * b + calib.encode_us("zen", p.M * p.vw, p.d(1))
+        de = de * b + calib.encode_us("dense", p.M * p.vw, p.d(1))
+    return "zen" if z < threshold * de else "dense"
 
 
 def zen_beats_dense(
@@ -368,3 +403,256 @@ def zen_beats_dense(
     """
     p = worst_case_profile(rows, density_budget, vw=max(d, 1))
     return choose_scheme(p, n, threshold=threshold) == "zen"
+
+
+# ---------------------------------------------------------------------------
+# Measured-time calibration (DESIGN.md §11)
+#
+# The analytic α-β model prices the *wire*; it cannot see that zen's encode
+# (hash + extract + pack) costs real device time while dense encodes for
+# free.  A CalibrationTable holds measured per-stage times keyed by
+# (backend, payload words, density); choose_scheme / choose_plan add the
+# measured encode overhead to each candidate so the decision flips to dense
+# exactly when encode cost eats the wire win (the PacTrain argument —
+# PAPERS.md, arXiv 2505.18563).
+# ---------------------------------------------------------------------------
+
+_CALIB_VERSION = 1
+
+# entry keys every table row carries:
+#   backend    "xla" | "pallas"        compute route measured
+#   size       int, payload FP32 words (M * vw)
+#   density    float, d(1) measured at
+#   n          int, sync-axis size of the measurement
+#   encode_us  float, one zen_encode of one worker's payload
+#   commit_us  float, zen push+aggregate+pull share (see CostCalibrator)
+#   zen_us     float, full zen_sync end-to-end (n simulated workers)
+#   dense_us   float, dense allreduce end-to-end (same rig)
+
+
+@dataclasses.dataclass
+class CalibrationTable:
+    """Measured per-stage sync times, persisted as JSON (``--calib-file``).
+
+    Lookups are nearest-neighbor in (log size, log density) with encode
+    time scaled linearly in payload size (encode work is O(nnz) ⊆ O(M)).
+    The *identity* table (no entries) prices encode at 0 µs and the wire
+    at 1 µs/word — choose_scheme / choose_plan then degenerate bitwise to
+    the analytic α-β decision (property-tested)."""
+
+    entries: list = dataclasses.field(default_factory=list)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def identity(cls) -> "CalibrationTable":
+        """Zero encode overhead, unit wire rate: the analytic model."""
+        return cls(entries=[], meta={"identity": True})
+
+    # --- persistence -------------------------------------------------------
+    def save(self, path) -> None:
+        blob = {"version": _CALIB_VERSION, "meta": self.meta,
+                "entries": self.entries}
+        with open(path, "w") as f:
+            json.dump(blob, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path) -> "CalibrationTable":
+        with open(path) as f:
+            blob = json.load(f)
+        if blob.get("version") != _CALIB_VERSION:
+            raise ValueError(
+                f"calibration table {path}: version {blob.get('version')!r}"
+                f" != {_CALIB_VERSION} (re-run the calibrator)")
+        return cls(entries=blob["entries"], meta=blob.get("meta", {}))
+
+    # --- lookups -----------------------------------------------------------
+    def _nearest(self, size: float, density: float | None = None):
+        if not self.entries:
+            return None
+        size = max(float(size), 1.0)
+
+        def dist(e):
+            ds = abs(math.log(max(e["size"], 1) / size))
+            if density is None:
+                return ds
+            dd = abs(math.log(max(e["density"], 1e-9)
+                              / max(density, 1e-9)))
+            return ds + dd
+
+        return min(self.entries, key=dist)
+
+    def encode_us(self, scheme: str, size: float, density: float) -> float:
+        """Measured local-encode overhead (µs) of ``scheme`` on a payload
+        of ``size`` words at density ``density``.  Dense (a bare psum) and
+        any unmeasured scheme encode for free; zen pays the nearest
+        measurement scaled linearly in size."""
+        if scheme != "zen":
+            return 0.0
+        e = self._nearest(size, density)
+        if e is None:
+            return 0.0
+        return float(e["encode_us"]) * (max(float(size), 1.0)
+                                        / max(e["size"], 1))
+
+    def beta_us_per_word(self, size: float) -> float:
+        """Measured wire rate (µs per FP32 word) from the dense-allreduce
+        measurement nearest in size; 1.0 (the analytic unit) when empty."""
+        e = self._nearest(size)
+        if e is None:
+            return 1.0
+        words = dense_allreduce(
+            worst_case_profile(int(e["size"]), 1.0), int(e["n"]))
+        return float(e["dense_us"]) / max(words, 1.0)
+
+
+def plan_encode_overhead(
+    calib: CalibrationTable, plan: CommPlan, p: SparsityProfile,
+    topo: Topology,
+) -> float:
+    """Measured encode overhead (µs) a CommPlan pays: each non-trivial
+    stage encodes its (merged) payload once before its collectives."""
+    t, k = 0.0, 1
+    for stage in plan.stages:
+        lvl = topo.levels[stage.level]
+        if lvl.size > 1:
+            mp = merged_profile(p, k)
+            t += calib.encode_us(stage.scheme, mp.M * mp.vw, mp.d(1))
+        k *= lvl.size
+    return t
+
+
+class CostCalibrator:
+    """Measures real encode / commit / dense times on this machine and
+    returns a CalibrationTable (DESIGN.md §11).
+
+    Per (size, density) point it times, jitted and blocked-until-ready:
+      * ``zen_encode`` of one worker's payload       -> encode_us
+      * ``simulate(zen_sync)`` over n workers        -> zen_us
+      * ``simulate(dense_sync)`` over n workers      -> dense_us
+    The single-device simulation runs all n encodes serially, so the
+    commit share is ``max(zen_us - n * encode_us, 0)`` — on a real mesh
+    each device encodes once, concurrently.  Imports of jax / schemes are
+    deferred so the cost model stays importable on analysis-only rigs.
+    """
+
+    def __init__(self, *, backend: str = "xla", n: int = 4,
+                 sizes: tuple = (1 << 12, 1 << 14, 1 << 16),
+                 densities: tuple = (0.01, 0.1),
+                 iters: int = 5, warmup: int = 2, seed: int = 0):
+        if n < 2:
+            raise ValueError("CostCalibrator needs n >= 2 (a sync axis)")
+        self.backend = backend
+        self.n = n
+        self.sizes = tuple(int(s) for s in sizes)
+        self.densities = tuple(float(d) for d in densities)
+        self.iters = iters
+        self.warmup = warmup
+        self.seed = seed
+
+    def _time_us(self, fn, *args) -> float:
+        """min-of-iters wall time in µs (jax dispatch + compute)."""
+        import time as _time
+
+        import jax
+
+        for _ in range(self.warmup):
+            jax.block_until_ready(fn(*args))
+        best = math.inf
+        for _ in range(self.iters):
+            t0 = _time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best = min(best, _time.perf_counter() - t0)
+        return best * 1e6
+
+    def measure(self) -> CalibrationTable:
+        import functools
+
+        import jax
+        import numpy as np_
+
+        from repro.core import schemes
+
+        entries = []
+        rng = np_.random.default_rng(self.seed)
+        for size in self.sizes:
+            for density in self.densities:
+                budget = min(0.5, max(4.0 * density, 8.0 / size))
+                layout = schemes.make_zen_layout(
+                    size, self.n, density_budget=budget)
+                masks = rng.uniform(size=(self.n, size)) < density
+                g = jax.numpy.asarray(
+                    rng.standard_normal((self.n, size)).astype("float32")
+                    * masks)
+                enc = jax.jit(functools.partial(
+                    schemes.zen_encode, layout=layout,
+                    backend=self.backend))
+                encode_us = self._time_us(enc, g[0])
+                zen_run = jax.jit(functools.partial(
+                    schemes.simulate, schemes.zen_sync, layout=layout,
+                    backend=self.backend))
+                zen_us = self._time_us(zen_run, g)
+                dense_run = jax.jit(functools.partial(
+                    schemes.simulate, schemes.dense_sync))
+                dense_us = self._time_us(dense_run, g)
+                entries.append({
+                    "backend": self.backend,
+                    "size": size,
+                    "density": density,
+                    "n": self.n,
+                    "encode_us": encode_us,
+                    "commit_us": max(zen_us - self.n * encode_us, 0.0),
+                    "zen_us": zen_us,
+                    "dense_us": dense_us,
+                })
+        meta = {
+            "backend": self.backend,
+            "n": self.n,
+            "device": str(jax.devices()[0]),
+            "jax": jax.__version__,
+        }
+        return CalibrationTable(entries=entries, meta=meta)
+
+
+def _main(argv=None) -> None:
+    """``python -m repro.core.costmodel``: run the calibrator, persist the
+    table, and print where the measured decision differs from the analytic
+    one (the flip points)."""
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="repro.core.costmodel",
+        description="CostCalibrator: measure per-stage encode/commit/dense "
+                    "times on this machine and write a --calib-file table "
+                    "for launch/train.py and launch/dryrun.py")
+    ap.add_argument("--calib-file", required=True)
+    ap.add_argument("--backend", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--n", type=int, default=4)
+    ap.add_argument("--sizes", default="4096,16384,65536",
+                    help="comma-separated payload sizes (FP32 words)")
+    ap.add_argument("--densities", default="0.01,0.1")
+    ap.add_argument("--iters", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    cal = CostCalibrator(
+        backend=args.backend, n=args.n,
+        sizes=tuple(int(s) for s in args.sizes.split(",")),
+        densities=tuple(float(d) for d in args.densities.split(",")),
+        iters=args.iters)
+    table = cal.measure()
+    table.save(args.calib_file)
+    print(f"wrote {len(table.entries)} entries -> {args.calib_file} "
+          f"(device: {table.meta['device']})")
+    for e in table.entries:
+        p = worst_case_profile(e["size"], e["density"])
+        analytic = choose_scheme(p, e["n"])
+        measured = choose_scheme(p, e["n"], calib=table)
+        flip = "  <- FLIP" if analytic != measured else ""
+        print(f"  size={e['size']:>7} d={e['density']:<5} "
+              f"encode={e['encode_us']:>9.1f}us zen={e['zen_us']:>9.1f}us "
+              f"dense={e['dense_us']:>9.1f}us analytic={analytic} "
+              f"measured={measured}{flip}")
+
+
+if __name__ == "__main__":
+    _main()

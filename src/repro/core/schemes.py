@@ -402,18 +402,32 @@ def _resolve_backend(backend: str, interpret: bool | None) -> bool:
 
 def zen_encode(
     dense: jnp.ndarray, *, layout: ZenLayout, backend: str = "xla",
-    interpret: bool | None = None,
+    interpret: bool | None = None, fused: bool | None = None,
 ) -> ZenEncoded:
     """Zen stage 1: local sparsify + hierarchical hash + partition extract.
 
     Collective-free — this is the compute the bucketed schedule overlaps
-    with the previous bucket's wire time (repro.train.schedule)."""
+    with the previous bucket's wire time (repro.train.schedule).
+
+    ``fused`` (pallas backend only; default on) routes hash + insertion
+    rounds + extraction through the single-dispatch megakernel
+    (``kernels/zen_encode.py``, DESIGN.md §11) instead of the 3-dispatch
+    chain; both are bit-exact vs the XLA path (CI kernel-parity job).
+    """
     lo = layout
     n = lo.n
     interpret = _resolve_backend(backend, interpret)
     tabs = lo.device_tables()
     idx, ov_c = compact_indices(_mask(dense), lo.cap_index)
     if backend == "pallas":
+        if fused is None or fused:
+            from repro.kernels import ops  # deferred: kernels import schemes' deps
+
+            pidx, _occ, ovf = ops.zen_encode_fused_op(
+                idx, lo.static_seeds(), n, lo.r1, lo.r2,
+                interpret=interpret)
+            pval = _gather_rows(dense, pidx)
+            return ZenEncoded(pidx=pidx, pval=pval, overflow=ov_c + ovf)
         part = hierarchical_hash(
             idx, n=n, r1=lo.r1, r2=lo.r2, k=lo.k, backend="pallas",
             interpret=interpret, static_seeds=lo.static_seeds())
@@ -509,7 +523,7 @@ def zen_commit(
 def zen_sync(
     dense: jnp.ndarray, *, axis: str, layout: ZenLayout,
     use_hash_bitmap: bool = True, backend: str = "xla",
-    interpret: bool | None = None,
+    interpret: bool | None = None, fused: bool | None = None,
 ) -> tuple[jnp.ndarray, SyncStats]:
     """Zen synchronization: Alg. 1 push + Alg. 2 (hash bitmap) pull.
 
@@ -534,7 +548,7 @@ def zen_sync(
     pipelines (DESIGN.md §7).
     """
     enc = zen_encode(dense, layout=layout, backend=backend,
-                     interpret=interpret)
+                     interpret=interpret, fused=fused)
     return zen_commit(enc, dense, axis=axis, layout=layout,
                       use_hash_bitmap=use_hash_bitmap, backend=backend,
                       interpret=interpret)
@@ -548,7 +562,7 @@ def stage_sync(
     scheme: str, dense: jnp.ndarray, *, axis: str, n: int,
     capacity: int | None = None, layout: ZenLayout | None = None,
     use_hash_bitmap: bool = True, backend: str = "xla",
-    interpret: bool | None = None, block: int = 8,
+    interpret: bool | None = None, fused: bool | None = None, block: int = 8,
     cap_push: int | None = None, cap_pull: int | None = None,
 ) -> tuple[jnp.ndarray, SyncStats]:
     """Run one scheme over one named axis — the uniform entry the
@@ -563,7 +577,7 @@ def stage_sync(
             raise ValueError("stage_sync: scheme='zen' needs a layout")
         return zen_sync(dense, axis=axis, layout=layout,
                         use_hash_bitmap=use_hash_bitmap,
-                        backend=backend, interpret=interpret)
+                        backend=backend, interpret=interpret, fused=fused)
     if scheme == "agsparse":
         return agsparse_sync(dense, axis=axis, capacity=capacity)
     if scheme == "sparcml":

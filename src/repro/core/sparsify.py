@@ -234,6 +234,7 @@ class DensityController:
         ema: float = 0.8,
         threshold: float = 1.0,
         topology=None,
+        calib=None,
     ):
         """``bucket_sizes``/``schemes``: per compressed-bucket key (from
         ``GradSync.compressed_buckets()``).  ``n`` is the sync world size;
@@ -242,11 +243,14 @@ class DensityController:
         re-run decision uses the same α-β plan space (and plan tags) as
         the live bucket plan — an int-``n`` controller would recommend
         flat tags that never match ``hier(...)`` schemes and replan
-        forever."""
+        forever.  ``calib`` (a ``costmodel.CalibrationTable``, e.g.
+        ``gradsync.calib``) makes the re-run decision encode-cost-aware,
+        matching the live plan's pricing (DESIGN.md §11)."""
         self.sizes = dict(bucket_sizes)
         self.current = dict(schemes)
         self.n = max(n, 2)
         self.topology = topology
+        self.calib = calib
         self.ema = float(ema)
         self.threshold = float(threshold)
         self._d1: dict[str, float] = {}
@@ -286,7 +290,7 @@ class DensityController:
         target = self.topology if self.topology is not None else self.n
         for key, prof in self.profiles().items():
             out[key] = costmodel.choose_scheme(
-                prof, target, threshold=self.threshold)
+                prof, target, threshold=self.threshold, calib=self.calib)
         return out
 
     def drifted(self) -> dict[str, tuple[str, str]]:

@@ -67,6 +67,17 @@ class SyncConfig:
     # Compute route for Zen's encode/decode stages: "xla" (pure jnp) or
     # "pallas" (fused kernels via repro.kernels.ops; interpret mode off-TPU).
     backend: str = "xla"
+    # Pallas backend only: route the encode path through the single-dispatch
+    # megakernel (kernels/zen_encode.py, DESIGN.md §11) instead of the
+    # 3-dispatch hash/extract/pack chain.  Both are bit-exact vs XLA.
+    fused_encode: bool = True
+    # Path to a CostCalibrator JSON table (DESIGN.md §11).  When set, the
+    # 'auto' scheme decision adds *measured* per-stage encode overhead —
+    # zen is only picked when its wire win survives what encode actually
+    # costs on this machine.  Produce with `python -m repro.core.costmodel
+    # --calib-file PATH` (or let launch/train.py --calib-file calibrate on
+    # first use).  None = analytic α-β model (the historical decision).
+    calib_file: str | None = None
     # Bucketed overlap scheduling (DESIGN.md §7): fuse dense grads into
     # buckets of at most this many bytes and emit per-bucket sync ops
     # double-buffered.  None = monolithic per-leaf path (bit-exact PR-1).
@@ -137,6 +148,10 @@ class GradSync:
         self._layouts: dict[tuple[str, int], ZenLayout] = {}
         profiles = profiles or {}
         topo = self.topology
+        # measured-time calibration (DESIGN.md §11): loaded once at plan
+        # time; every 'auto' decision below then prices encode overhead
+        self.calib = (costmodel.CalibrationTable.load(cfg.calib_file)
+                      if cfg.calib_file else None)
 
         def auto_target():
             """What 'auto' hands to choose_scheme: the historical int
@@ -159,7 +174,8 @@ class GradSync:
                 prof = costmodel.worst_case_profile(
                     rows, cfg.density_budget, vw=max(d, 1))
             return costmodel.choose_scheme(
-                prof, auto_target(), threshold=cfg.auto_threshold)
+                prof, auto_target(), threshold=cfg.auto_threshold,
+                calib=self.calib)
 
         def resolve_compressed(key: str, size: int) -> str:
             """Plan tag for one EF-compressed dense bucket: 'auto' runs
@@ -172,7 +188,8 @@ class GradSync:
             if prof is None:
                 prof = sparsify.compress_profile(self.compress, size)
             return costmodel.choose_scheme(
-                prof, auto_target(), threshold=cfg.auto_threshold)
+                prof, auto_target(), threshold=cfg.auto_threshold,
+                calib=self.calib)
 
         self.plan = bk.make_bucket_plan(
             grad_shapes, self._is_sparse, cfg.bucket_bytes, resolve_scheme,
@@ -251,6 +268,11 @@ class GradSync:
         what ``launch/train.py --node-size``/``dryrun.py`` print so the
         plan a run executes is visible, not inferred."""
         lines = [f"topology: {self.topology.describe()}"]
+        if self.calib is not None:
+            lines.append(
+                f"calibration: {len(self.calib.entries)} measured entries "
+                f"({self.calib.meta.get('device', '?')}) — 'auto' prices "
+                f"encode overhead")
         for b in self.plan.buckets:
             cplan = self._plans[b.bid]
             stages = " ; ".join(
@@ -286,6 +308,7 @@ class GradSync:
         kw = dict(
             capacity=cap, layout=self._layouts.get((bucket.key, level)),
             use_hash_bitmap=cfg.use_hash_bitmap, backend=cfg.backend,
+            fused=cfg.fused_encode,
         )
         if scheme == "omnireduce":
             blk = 8
@@ -305,7 +328,7 @@ class GradSync:
                 and self.topology.levels[0].size > 1):
             enc = schemes.zen_encode(
                 payload, layout=self._layouts[bucket.key, 0],
-                backend=self.cfg.backend)
+                backend=self.cfg.backend, fused=self.cfg.fused_encode)
             return (payload, enc)
         return (payload,)
 
@@ -371,6 +394,20 @@ class GradSync:
         if self.pod_axis is not None:
             out = lax.pmean(out, self.pod_axis)
         return out, st
+
+    def encode_only(self, grads: Any) -> list:
+        """Every bucket's local encode stage in isolation — no collectives,
+        no mesh needed.  The measurement probe for the encode/commit time
+        split (CostCalibrator, benchmarks/run.py ``stages``; DESIGN.md
+        §11): wall-clock of this minus the full ``__call__`` attributes
+        the e2e time stage-by-stage.  Uncompressed payloads only (the
+        compress hook needs residual state — use ``__call__`` for that)."""
+        from repro.train import schedule
+
+        flat, _ = jax.tree_util.tree_flatten(grads)
+        payloads = [bk.gather_bucket(b, flat) for b in self.plan.buckets]
+        return schedule.encode_all(
+            self.plan.buckets, payloads, self._encode_bucket)
 
     # -- pytree sync ----------------------------------------------------------
 

@@ -7,6 +7,7 @@ on TPU pass ``interpret=False``.
 """
 from __future__ import annotations
 
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +17,7 @@ from repro.kernels import bitmap as _bm
 from repro.kernels import compact as _cp
 from repro.kernels import hash_stage as _hs
 from repro.kernels import scatter_add as _sa
+from repro.kernels import zen_encode as _ze
 
 LANES = _hs.LANES
 BITS = _bm.BITS
@@ -85,3 +87,153 @@ def coo_scatter_add_op(out: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray,
     idxp = jnp.pad(idx, (0, pad), constant_values=EMPTY)
     valsp = jnp.pad(vals, ((0, pad), (0, 0)))
     return _sa.coo_scatter_add(out, idxp, valsp, interpret=interpret)
+
+
+def bitmap_pack_rows_op(mask: jnp.ndarray, *, interpret: bool | None = None):
+    """bool/int [n, L] -> uint32 [n, ceil(L/32)]: per-row packed occupancy.
+
+    Rows are padded to a word boundary before flattening, so each row's
+    words are exactly the 1-D ``bitmap_pack_op`` of that row.
+    """
+    n, L = mask.shape
+    W = -(-L // BITS)
+    m = jnp.pad(mask.astype(jnp.int32), ((0, 0), (0, W * BITS - L)))
+    return bitmap_pack_op(m.reshape(-1), interpret=interpret).reshape(n, W)
+
+
+@functools.partial(jax.jit, static_argnames=("seeds", "n", "r1", "r2"))
+def _zen_encode_fused_xla(indices: jnp.ndarray, seeds: tuple, n: int,
+                          r1: int, r2: int):
+    """Single-dispatch XLA composition of the fused encode — hash,
+    insertion rounds, extraction, and bitmap pack in ONE executable, no
+    intermediate dispatch or HBM round-trip at the jax level.
+
+    Bit-exact re-derivation of ``hierarchical_hash`` + ``row_compact`` +
+    pack, tuned for CPU/GPU XLA where scatter cost is a per-update loop:
+
+    * nnz-adaptive lane budget: ``compact_indices`` places every live
+      index before the EMPTY pad, and EMPTY candidates can never win a
+      slot, take a serial rank, or overflow — so a ``lax.switch`` over
+      static slice sizes {cap, cap/2, cap/4} processes only the smallest
+      prefix covering the live count.  At d=0.01 with the standard 4x
+      capacity margin that is 4x fewer scatter updates per round.
+    * serial ranks from a transposed segmented cumsum ([n, C], contiguous
+      along the scan axis) instead of ``partition_rank``'s [C, n] layout.
+    * gather-only extraction: binary search over each row's validity
+      cumsum replaces the compaction scatter, and the occupancy bitmap is
+      a prefix-of-nnz mask packed with shifts (no scatter, no sort).
+    """
+    row = r1 + r2
+    cap = indices.shape[0]
+    sd = jnp.asarray(seeds, dtype=jnp.uint32)
+    from repro.core.hashing import hash_mod
+
+    def pipeline(idxs):
+        C = idxs.shape[0]
+        valid = idxs != EMPTY
+        p = jnp.clip(hash_mod(idxs, sd[0], n), 0, n - 1)
+        base = p * row
+        mem = jnp.full((n * row,), EMPTY, dtype=jnp.int32)
+        pending = valid
+        for i in range(1, len(seeds)):
+            slot = base + jnp.clip(hash_mod(idxs, sd[i], r1), 0, r1 - 1)
+            occupied = mem[slot] != EMPTY
+            propose = pending & ~occupied
+            cand = jnp.where(propose, idxs, EMPTY)
+            mem = mem.at[slot].min(cand, mode="drop")
+            won = pending & (mem[slot] == idxs) & propose
+            pending = pending & ~won
+        surv = pending
+        onehot = (p[None, :] == jnp.arange(n, dtype=p.dtype)[:, None]) \
+            & surv[None, :]
+        seg = jnp.cumsum(onehot.astype(jnp.int32), axis=1) - 1
+        rank = jnp.where(surv, seg[p, jnp.arange(C)], -1)
+        fits = surv & (rank < r2)
+        slot = base + r1 + jnp.clip(rank, 0, r2 - 1)
+        mem = mem.at[jnp.where(fits, slot, n * row)].set(
+            jnp.where(fits, idxs, EMPTY), mode="drop")
+        overflow = jnp.sum((surv & ~fits).astype(jnp.int32))
+        mem = mem.reshape(n, row)
+        v = mem != EMPTY
+        cum = jnp.cumsum(v.astype(jnp.int32), axis=1)
+        nnz_row = cum[:, -1:]
+        q = jnp.arange(1, row + 1, dtype=jnp.int32)[None, :]
+        lo = jnp.zeros((n, row), jnp.int32)
+        hi = jnp.full((n, row), row - 1, jnp.int32)
+        for _ in range(max(row - 1, 1).bit_length()):
+            mid = (lo + hi) // 2
+            go_right = jnp.take_along_axis(cum, mid, axis=1) < q
+            lo = jnp.where(go_right, mid + 1, lo)
+            hi = jnp.where(go_right, hi, mid)
+        src = jnp.clip(lo, 0, row - 1)
+        j = jnp.arange(row, dtype=jnp.int32)[None, :]
+        live = j < nnz_row
+        pidx = jnp.where(live, jnp.take_along_axis(mem, src, axis=1), EMPTY)
+        W = -(-row // BITS)
+        bit = jnp.pad(live.astype(jnp.uint32),
+                      ((0, 0), (0, W * BITS - row))).reshape(n, W, BITS)
+        occ = jnp.sum(bit << jnp.arange(BITS, dtype=jnp.uint32)[None, None, :],
+                      axis=2, dtype=jnp.uint32)
+        return pidx, occ, overflow
+
+    sizes = sorted({cap, -(-cap // 2), -(-cap // 4)}, reverse=True)
+    if len(sizes) == 1:
+        return pipeline(indices)
+    nnz = jnp.sum((indices != EMPTY).astype(jnp.int32))
+    bidx = sum((nnz <= s).astype(jnp.int32) for s in sizes[1:])
+    return jax.lax.switch(
+        bidx, [lambda x, s=s: pipeline(jax.lax.slice(x, (0,), (s,)))
+               for s in sizes], indices)
+
+
+def zen_encode_fused_op(indices: jnp.ndarray, seeds, n: int, r1: int,
+                        r2: int, *, interpret: bool | None = None,
+                        force_kernel: bool = False):
+    """Fused Zen encode: ONE dispatch for hash + insertion rounds +
+    extraction + bitmap pack (DESIGN.md §11).
+
+    indices int32 [C] (EMPTY-padded, from ``compact_indices``) ->
+    (pidx int32 [n, r1+r2], occ uint32 [n, ceil((r1+r2)/32)], overflow
+    scalar).  Bit-exact vs ``zen_encode_unfused`` (the 3-dispatch route)
+    and ``ref.zen_encode_ref`` (pure-XLA composition) — the CI
+    kernel-parity matrix enforces it.
+
+    Dispatch: on TPU (interpret=False) this is the Pallas megakernel in
+    ``kernels/zen_encode.py``.  Off-TPU the megakernel's interpret-mode
+    emulation would execute its dense hit matrices as real XLA ops —
+    O(n·C·L) work that exists only to vectorize the TPU VPU — so the
+    fused op lowers to the equivalent single-dispatch XLA composition
+    instead (same outputs, one executable).  ``force_kernel=True`` runs
+    the interpret-mode megakernel anyway (the parity tests' middle
+    oracle: fused kernel → interpret kernel → XLA composition).
+    """
+    interpret = _resolve(interpret)
+    seeds = tuple(int(s) for s in seeds)
+    if interpret and not force_kernel:
+        return _zen_encode_fused_xla(indices, seeds, n, r1, r2)
+    C = indices.shape[0]
+    pad = (-C) % LANES
+    idx2 = jnp.pad(indices, (0, pad), constant_values=EMPTY)[None, :]
+    pidx, occ, ovf = _ze.zen_encode_fused(
+        idx2, seeds=seeds, n=n, r1=r1, r2=r2, interpret=interpret)
+    L = r1 + r2
+    W = -(-L // BITS)
+    # nnz per row <= L, so the dropped tail words/columns are all-zero/EMPTY
+    return pidx[:, :L], occ[:, :W], jnp.sum(ovf)
+
+
+def zen_encode_unfused(indices: jnp.ndarray, seeds, n: int, r1: int,
+                       r2: int, *, interpret: bool | None = None):
+    """The pre-fusion 3-dispatch encode: hash_stage kernel + XLA conflict
+    rounds + row_compact kernel + bitmap_pack kernel.  Kept as the fused
+    megakernel's interpret-mode oracle and the benchmark baseline
+    (benchmarks/micro_sync.py ``encode_fused`` series)."""
+    from repro.core.hashing import hierarchical_hash  # deferred: cycle
+
+    seeds = tuple(int(s) for s in seeds)
+    part = hierarchical_hash(
+        indices, n=n, r1=r1, r2=r2, k=len(seeds) - 1, backend="pallas",
+        interpret=interpret, static_seeds=seeds)
+    pidx = row_compact_op(part.memory, interpret=interpret)
+    occ = bitmap_pack_rows_op(pidx != EMPTY, interpret=interpret)
+    return pidx, occ, part.overflow

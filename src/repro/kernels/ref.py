@@ -56,6 +56,26 @@ def coo_scatter_add_ref(out_rows: int, idx: jnp.ndarray,
 from repro.core.hashing import row_compact as row_compact_ref  # noqa: E402,F401
 
 
+def zen_encode_ref(indices: jnp.ndarray, seeds, n: int, r1: int, r2: int):
+    """XLA-composition oracle for the fused encode megakernel
+    (kernels/zen_encode.py): hierarchical_hash(backend="xla") +
+    row_compact + per-row bitmap_pack_ref.  Returns
+    (pidx [n, r1+r2], occ uint32 [n, ceil((r1+r2)/32)], overflow)."""
+    from repro.core.hashing import hierarchical_hash  # deferred: cycle
+
+    part = hierarchical_hash(
+        indices, n=n, r1=r1, r2=r2, k=len(seeds) - 1,
+        seeds=jnp.asarray([int(s) for s in seeds], dtype=jnp.uint32),
+        backend="xla")
+    pidx = row_compact_ref(part.memory)
+    L = r1 + r2
+    W = -(-L // BITS)
+    bits = jnp.pad((pidx != EMPTY).astype(jnp.int32),
+                   ((0, 0), (0, W * BITS - L)))
+    occ = jnp.stack([bitmap_pack_ref(b) for b in bits])
+    return pidx, occ, part.overflow
+
+
 def row_compact_argsort_ref(mem: jnp.ndarray) -> jnp.ndarray:
     """The pre-fast-path compaction (stable per-row argsort).  EMPTY is int32
     max, so sorting moves it to the back — but it also sorts the live values

@@ -1,0 +1,134 @@
+"""Pallas-TPU megakernel: the fused Zen encode path (DESIGN.md §11).
+
+Fuses the three encode dispatches — hash stage (``hash_stage.py``), the k
+round-synchronous insertion rounds + serial memory (previously XLA
+scatter_min in ``hashing.hierarchical_hash``), row extraction
+(``compact.py``) and occupancy bitmap packing (``bitmap.py``) — into ONE
+kernel: gradient indices enter VMEM once and the wire-format outputs
+(compacted per-partition indices, packed occupancy bitmap, overflow count)
+leave once.  The 3-dispatch route materializes the n x (r1+r2) index memory
+to HBM twice (after hashing, after compaction); here it never leaves VMEM.
+
+Key structural fact that makes the fusion a clean grid: every insertion
+round, the serial-memory placement, the extraction and the bitmap of an
+index happen entirely within its h0-partition's row.  So the grid is
+``(n,)`` — one step per partition, each step fully self-contained:
+
+  grid step i:
+    in   idx   [1, Cp]   the whole EMPTY-padded index set (same block
+                         every step; partitions filter by h0)
+    out  pidx  [1, Lp]   partition i's compacted indices (slot order)
+    out  occ   [1, Wp]   uint32 occupancy bitmap of the compacted row
+    out  ovf   [1, 1]    partition i's serial-memory overflow count
+
+Race-free by construction: the scatter_min race of the XLA path becomes a
+per-slot min-reduction over an explicit [Cp, Lp] proposal matrix (the same
+O(C·L) vectorized-ALU trade as ``compact.py``'s hit matrix), and the
+"write-and-read" collision check becomes an exact winner test — indices are
+unique (they come from ``compact_indices``), so ``idx == min(proposals)``
+identifies the winner with no ties.  Bit-exactness vs both oracles
+(interpret-mode 3-dispatch and XLA composition) is CI-gated
+(tests/test_zen_encode_fused.py).
+
+VMEM envelope: the proposal/hit matrices are [Cp, Lp] and [Lp, Lp] int32
+per grid step.  For the capacity recipe (r1 = 2|I|/n, r2 = r1/10) that is
+~(2|I|/n)² words — fine for the |I| ~ 1e4-per-bucket regime the bucketed
+schedule produces; for much larger single buckets, tile the round loop
+over Cp blocks (the reduction is associative) before running un-interpreted
+on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import EMPTY
+from repro.kernels.hash_stage import _hash_u32
+
+LANES = 128
+BITS = 32
+
+
+def _kernel(idx_ref, pidx_ref, occ_ref, ovf_ref, *,
+            seeds: tuple, n: int, r1: int, r2: int):
+    i = pl.program_id(0)
+    idx = idx_ref[...]                                    # [1, Cp] int32
+    valid = idx != EMPTY
+    # --- hash stage: h0 picks the partition; this step keeps only its own --
+    p = (_hash_u32(idx, seeds[0]) % jnp.uint32(n)).astype(jnp.int32)
+    pending = valid & (p == i)                            # [1, Cp]
+
+    Lp = pidx_ref.shape[1]
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, Lp), 1)  # [1, Lp]
+    row = jnp.full((1, Lp), EMPTY, dtype=jnp.int32)
+
+    # --- k round-synchronous insertion rounds (Alg. 1 parallel memory) -----
+    # cand[c, l]: pending index c proposes slot l this round; prop masks to
+    # currently-empty slots; the per-slot min over proposers IS scatter_min.
+    for s in seeds[1:]:
+        q = (_hash_u32(idx, s) % jnp.uint32(r1)).astype(jnp.int32)  # [1, Cp]
+        cand = pending[0, :, None] & (q[0, :, None] == slot[0, None, :])
+        prop = cand & (row[0, None, :] == EMPTY)          # [Cp, Lp]
+        m = jnp.min(jnp.where(prop, idx[0, :, None], EMPTY), axis=0)  # [Lp]
+        won = jnp.any(prop & (m[None, :] == idx[0, :, None]), axis=1)  # [Cp]
+        row = jnp.minimum(row, m[None, :])
+        pending = pending & ~won[None, :]
+
+    # --- serial memory: cumsum rank ≙ the paper's atomicAdd counter --------
+    surv = pending
+    rank = jnp.cumsum(surv.astype(jnp.int32), axis=1) - 1  # [1, Cp]
+    fits = surv & (rank < r2)
+    tgt = r1 + rank
+    hit = fits[0, :, None] & (tgt[0, :, None] == slot[0, None, :])
+    srow = jnp.min(jnp.where(hit, idx[0, :, None], EMPTY), axis=0)
+    row = jnp.minimum(row, srow[None, :])
+    ovf_ref[...] = jnp.sum((surv & ~fits).astype(jnp.int32), keepdims=True)
+
+    # --- extraction: order-preserving compaction (compact.py formulation) --
+    lvalid = row != EMPTY
+    pos = jnp.cumsum(lvalid.astype(jnp.int32), axis=1) - 1
+    nnz = jnp.sum(lvalid.astype(jnp.int32))
+    hit2 = lvalid[0, :, None] & (pos[0, :, None] == slot[0, None, :])
+    comp = jnp.sum(jnp.where(hit2, row[0, :, None], 0), axis=0)       # [Lp]
+    pidx_ref[...] = jnp.where(slot < nnz, comp[None, :], EMPTY)
+
+    # --- occupancy bitmap of the COMPACTED row: a prefix of nnz ones -------
+    Wp = occ_ref.shape[1]
+    w_iota = jax.lax.broadcasted_iota(jnp.int32, (Wp, BITS), 0)
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (Wp, BITS), 1)
+    bit = ((w_iota * BITS + lane.astype(jnp.int32)) < nnz).astype(jnp.uint32)
+    occ_ref[...] = jnp.sum(bit << lane, axis=1, dtype=jnp.uint32)[None, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("seeds", "n", "r1", "r2", "interpret"))
+def zen_encode_fused(indices: jnp.ndarray, *, seeds: tuple, n: int,
+                     r1: int, r2: int, interpret: bool = True):
+    """indices int32 [1, Cp] (EMPTY-padded, Cp a LANES multiple) ->
+    (pidx [n, Lp], occ uint32 [n, Lp/32], ovf [n, 1]) with Lp = r1+r2
+    rounded up to LANES.  ``seeds``: k+1 compile-time python ints."""
+    assert indices.ndim == 2 and indices.shape[0] == 1
+    assert indices.shape[1] % LANES == 0
+    L = r1 + r2
+    Lp = -(-L // LANES) * LANES
+    Wp = Lp // BITS
+    Cp = indices.shape[1]
+    return pl.pallas_call(
+        functools.partial(_kernel, seeds=seeds, n=n, r1=r1, r2=r2),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, Cp), lambda i: (0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, Lp), lambda i: (i, 0)),
+            pl.BlockSpec((1, Wp), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, Lp), jnp.int32),
+            jax.ShapeDtypeStruct((n, Wp), jnp.uint32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(indices)

@@ -30,7 +30,8 @@ def dryrun_combo(arch: str, shape: str, multi_pod: bool,
                  fused_attn: bool = False, moe_a2a: bool = False,
                  bucket_bytes: int | None = None,
                  compress: str = "none", node_size: int = 1,
-                 alpha_beta: str | None = None) -> dict:
+                 alpha_beta: str | None = None,
+                 calib_file: str | None = None) -> dict:
     """Lower + compile one (arch, input-shape, mesh) combination.
 
     Returns the record for EXPERIMENTS.md §Dry-run / §Roofline.
@@ -42,7 +43,10 @@ def dryrun_combo(arch: str, shape: str, multi_pod: bool,
     mesh; ``node_size`` compiles the hierarchical two-level sync
     (DESIGN.md §10 — the data axis splits into (dp_inter, dp_intra) and
     every bucket runs its CommPlan, so per-level collective bytes land in
-    the record).
+    the record); ``calib_file`` plans from a measured-time calibration
+    table (DESIGN.md §11 — must already exist; produce it with
+    ``python -m repro.core.costmodel``) so the compiled plan matches what
+    a calibrated trainer would run.
     """
     from repro.core.zen import SyncConfig
 
@@ -52,7 +56,8 @@ def dryrun_combo(arch: str, shape: str, multi_pod: bool,
     t0 = time.time()
     prog = build_program(cfg, mesh, TrainerConfig(
         sync=SyncConfig(scheme=sync_scheme, bucket_bytes=bucket_bytes,
-                        compress=compress, alpha_beta=alpha_beta)),
+                        compress=compress, alpha_beta=alpha_beta,
+                        calib_file=calib_file)),
         pad_heads=pad_heads, moe_a2a=moe_a2a)
     mode = spec["mode"]
 
@@ -148,6 +153,11 @@ def main():
                     help="α-β link override for the topology cost model "
                          "('a_intra,b_intra,a_inter,b_inter' in µs, "
                          "µs/word)")
+    ap.add_argument("--calib-file", default=None,
+                    help="measured-time calibration table (DESIGN.md §11) "
+                         "for encode-cost-aware plan choice; must exist "
+                         "(write one with `python -m repro.core.costmodel"
+                         " --calib-file PATH`)")
     ap.add_argument("--pad-heads", action="store_true",
                     help="§Perf: pad+shard replicated attention heads")
     ap.add_argument("--fused-attn", action="store_true",
@@ -185,7 +195,8 @@ def main():
                                        bucket_bytes=args.bucket_bytes,
                                        compress=args.compress,
                                        node_size=args.node_size,
-                                       alpha_beta=args.alpha_beta)
+                                       alpha_beta=args.alpha_beta,
+                                       calib_file=args.calib_file)
                     fp.write_text(json.dumps(rec, indent=1))
                     print(f"OK   {tag}: compile={rec['compile_s']}s "
                           f"flops/dev={rec['flops_per_device']:.3e} "

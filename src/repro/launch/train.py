@@ -66,6 +66,14 @@ def main():
                          "(DESIGN.md §8): 'topk:0.01', 'randk:0.05', "
                          "'threshold:1e-3'; append ':noef' to drop the "
                          "error-feedback residual (lossy)")
+    ap.add_argument("--calib-file", default=None,
+                    help="measured-time cost calibration (DESIGN.md §11): "
+                         "JSON table of per-stage encode/commit/dense "
+                         "times; scheme='auto' then only picks zen when "
+                         "the wire win survives the MEASURED encode cost. "
+                         "Missing file: CostCalibrator runs once on this "
+                         "machine and writes it.  Also produced by "
+                         "`python -m repro.core.costmodel`")
     ap.add_argument("--replan-every", type=int, default=0,
                     help="adaptive density control: every N steps compare "
                          "choose_scheme on the MEASURED post-compression "
@@ -91,13 +99,19 @@ def main():
     pods, dp, tp = ([1] * (3 - len(dims)) + dims)
     make_ctx(cfg, tp, dp, pods, node_size=args.node_size)
     mesh = make_mesh(tuple(dims), axes, node_size=args.node_size)
+    if args.calib_file and not Path(args.calib_file).exists():
+        # calibrate once on this machine, persist, then plan from it
+        from repro.core.costmodel import CostCalibrator
+        print(f"calibrating encode/commit times -> {args.calib_file}")
+        CostCalibrator(n=max(dp, 2), iters=3).measure().save(args.calib_file)
     tcfg = TrainerConfig(
         opt=OptConfig(lr=args.lr),
         sync=SyncConfig(scheme=args.sync,
                         density_budget=args.density_budget,
                         bucket_bytes=args.bucket_bytes,
                         compress=args.compress,
-                        alpha_beta=args.alpha_beta),
+                        alpha_beta=args.alpha_beta,
+                        calib_file=args.calib_file),
         zero1=not args.no_zero1)
     prog = build_program(cfg, mesh, tcfg)
     attach_train(prog, args.seq_len, args.global_batch)
@@ -127,7 +141,10 @@ def main():
             # hier plans live in the topology's tag space; flat keeps the
             # historical int-n decision (bit-identical picks)
             topology=(None if prog.gradsync.topology.flat
-                      else prog.gradsync.topology))
+                      else prog.gradsync.topology),
+            # replan decisions price encode with the same measured table
+            # as the live plan (no calib -> analytic, as before)
+            calib=prog.gradsync.calib)
 
     data = iter(SyntheticLM(cfg, DataConfig(
         seq_len=args.seq_len, batch=args.global_batch, seed=args.seed)))

@@ -106,3 +106,25 @@ def run_schedule(
         outs[i], stats[i] = commit(b, enc)
         enc = nxt
     return outs, stats
+
+
+def encode_all(
+    buckets: Sequence[Bucket],
+    payloads: Sequence[Any],
+    encode: Callable[[Bucket, Any], Any],
+    compress: Callable[[Bucket, Any], Any] | None = None,
+) -> list[Any]:
+    """The pipeline's local prefix in isolation: compress (optional) +
+    encode of every bucket, no collectives, no fences.
+
+    This is what ``run_schedule`` overlaps with wire time — exposed
+    separately so the CostCalibrator and the per-stage benchmark split
+    (benchmarks/run.py ``stages``) can time encode without a mesh
+    (DESIGN.md §11).  Returns the per-bucket encode results in order.
+    """
+    out = []
+    for b, p in zip(buckets, payloads):
+        if compress is not None:
+            p = compress(b, p)
+        out.append(encode(b, p))
+    return out

@@ -1,0 +1,231 @@
+"""Measured-time calibration tests (DESIGN.md §11).
+
+Three contracts:
+
+1. **Identity degeneracy** (property-tested): ``choose_scheme`` /
+   ``choose_plan`` with ``CalibrationTable.identity()`` are *bitwise*
+   identical to the analytic α-β decision — over random profiles, int-n,
+   flat and two-level topologies — preserving PR 5's flat/hier
+   invariants (tests/test_topology.py).
+2. **Encode overhead is one-directional**: a measured table can only
+   flip zen -> dense (dense encodes for free), never dense -> zen, and
+   a synthetic encode-dominant table *does* flip every zen pick.
+3. **Persistence**: save/load round-trips exactly, version mismatches
+   are rejected, and CostCalibrator produces a loadable table (the CI
+   ``calibration-smoke`` step exercises the CLI end-to-end).
+"""
+import json
+import math
+
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.core import costmodel as cm
+from repro.core import topology as tp
+
+
+def _profile(m_log2: int, d1: float, gamma: float, skew: float):
+    M = 1 << m_log2
+    block = 256
+
+    def d(i):
+        return min(1.0, d1 * max(i, 1) ** gamma)
+
+    def s(k):
+        return 1.0 + skew * math.log2(max(k, 1))
+
+    return cm.SparsityProfile(
+        M=M, d=d, s=s, block=block,
+        block_density=lambda i: min(1.0, d(i) * block),
+        block_max=lambda i, parts: min(1.0, d(i) * block * s(parts)),
+    )
+
+
+PROFILE_ST = st.tuples(
+    st.integers(10, 22),                            # log2 M
+    st.floats(1e-4, 0.9),                           # d(1)
+    st.floats(0.05, 1.0),                           # densification exponent
+    st.floats(0.0, 2.0),                            # skew growth
+)
+
+
+def _synthetic_table(encode_us: float = 1e9, *, n: int = 8,
+                     size: int = 1 << 14, density: float = 0.01,
+                     dense_us: float = 100.0) -> cm.CalibrationTable:
+    """One-entry table with the full entry-key schema; the default
+    encode_us dwarfs any wire term (the encode-dominant CI fixture)."""
+    return cm.CalibrationTable(entries=[dict(
+        backend="xla", size=size, density=density, n=n,
+        encode_us=encode_us, commit_us=0.0,
+        zen_us=encode_us, dense_us=dense_us)])
+
+
+# ---------------------------------------------------------------------------
+# 1. identity degeneracy (the property the ISSUE names)
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=30)
+@given(PROFILE_ST, st.sampled_from([2, 4, 8, 16, 64]))
+def test_identity_degenerates_int_and_flat(args, n):
+    p = _profile(*args)
+    ident = cm.CalibrationTable.identity()
+    assert cm.choose_scheme(p, n, calib=ident) == cm.choose_scheme(p, n)
+    topo = tp.flat_topology(n)
+    assert (cm.choose_scheme(p, topo, calib=ident)
+            == cm.choose_scheme(p, topo))
+
+
+@settings(deadline=None, max_examples=30)
+@given(PROFILE_ST, st.sampled_from([(2, 2), (2, 4), (4, 2), (8, 4)]))
+def test_identity_degenerates_hier_to_analytic_argmin(args, shape):
+    """Measured-time choose_plan with the identity table IS the analytic
+    α-β argmin: same plan object, and that plan attains the published
+    plan_times minimum (PR 5's invariant, now under the calib path)."""
+    p = _profile(*args)
+    topo = tp.two_level_topology(*shape)
+    ident = cm.CalibrationTable.identity()
+    analytic = cm.choose_plan(p, topo)
+    measured = cm.choose_plan(p, topo, calib=ident)
+    assert measured.tag() == analytic.tag()
+    times = cm.plan_times(p, topo)
+    times.pop("lower_bound")
+    # threshold=1.0 biases ties toward dense; the picked plan still must
+    # attain the minimum of the published candidate times
+    assert times[measured.tag()] <= min(times.values()) * (1 + 1e-12)
+
+
+@settings(deadline=None, max_examples=30)
+@given(PROFILE_ST, st.sampled_from([2, 4, 8, 16]))
+def test_identity_preserves_flat_hier_bit_identity(args, n):
+    """PR 5's degenerate-topology invariant survives the calib path: the
+    flat Topology and the historical int-n signature still agree exactly
+    when the identity table is threaded through."""
+    p = _profile(*args)
+    topo = tp.flat_topology(n)
+    ident = cm.CalibrationTable.identity()
+    assert (cm.choose_scheme(p, topo, calib=ident)
+            == cm.choose_scheme(p, n, calib=ident))
+
+
+def test_identity_plan_encode_overhead_is_zero():
+    p = cm.worst_case_profile(1 << 12, 0.05)
+    topo = tp.two_level_topology(4, 2)
+    ident = cm.CalibrationTable.identity()
+    for plan in cm.candidate_plans(topo, p.M):
+        assert cm.plan_encode_overhead(ident, plan, p, topo) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# 2. encode overhead flips zen -> dense, never the reverse
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=40)
+@given(PROFILE_ST, st.sampled_from([2, 4, 8]),
+       st.floats(0.0, 1e7))
+def test_encode_overhead_never_flips_dense_to_zen(args, n, enc):
+    p = _profile(*args)
+    table = _synthetic_table(enc, n=n, size=p.M * p.vw, density=p.d(1))
+    if cm.choose_scheme(p, n) == "dense":
+        assert cm.choose_scheme(p, n, calib=table) == "dense"
+
+
+def test_encode_dominant_table_flips_flat_to_dense():
+    """The CI calibration-smoke fixture: a profile the analytic model
+    confidently gives to zen flips to dense once encode costs 1e9 µs."""
+    p = cm.worst_case_profile(1 << 14, 0.01)
+    n = 8
+    assert cm.choose_scheme(p, n) == "zen"
+    table = _synthetic_table()
+    assert cm.choose_scheme(p, n, calib=table) == "dense"
+    topo = tp.flat_topology(n)
+    assert cm.choose_scheme(p, topo) == "zen"
+    assert cm.choose_scheme(p, topo, calib=table) == "dense"
+
+
+def test_encode_dominant_table_prices_zen_plans_out_hier():
+    """Only zen pays measured encode (the table prices dense and other
+    schemes' encodes at 0), so under an encode-dominant table every
+    zen-bearing candidate must time worse than all-dense and the chosen
+    plan must carry no zen stage."""
+    p = cm.worst_case_profile(1 << 14, 0.01)
+    topo = tp.two_level_topology(4, 2)
+    table = _synthetic_table()
+    cands = cm.candidate_plans(topo, p.M)
+    dense_t = cm.plan_time(cands[0], p, topo)
+    for plan in cands:
+        if not any(s.scheme == "zen" for s in plan.stages):
+            continue
+        t = (cm.plan_time(plan, p, topo)
+             + cm.plan_encode_overhead(table, plan, p, topo))
+        assert t > dense_t, plan.tag()
+    measured = cm.choose_plan(p, topo, calib=table)
+    assert all(s.scheme != "zen" for s in measured.stages), measured.tag()
+
+
+def test_encode_us_lookup_scales_linearly_and_dense_is_free():
+    table = _synthetic_table(100.0, size=1 << 10)
+    assert table.encode_us("dense", 1 << 10, 0.01) == 0.0
+    assert table.encode_us("zen", 1 << 10, 0.01) == 100.0
+    assert table.encode_us("zen", 1 << 11, 0.01) == pytest.approx(200.0)
+    ident = cm.CalibrationTable.identity()
+    assert ident.encode_us("zen", 1 << 20, 0.01) == 0.0
+    assert ident.beta_us_per_word(1 << 20) == 1.0
+
+
+def test_nearest_lookup_prefers_closest_log_point():
+    table = cm.CalibrationTable(entries=[
+        dict(backend="xla", size=1 << 10, density=0.01, n=4,
+             encode_us=10.0, commit_us=0.0, zen_us=10.0, dense_us=50.0),
+        dict(backend="xla", size=1 << 16, density=0.01, n=4,
+             encode_us=640.0, commit_us=0.0, zen_us=640.0, dense_us=70.0),
+    ])
+    # exact hits return the entry's own encode time
+    assert table.encode_us("zen", 1 << 10, 0.01) == 10.0
+    assert table.encode_us("zen", 1 << 16, 0.01) == 640.0
+    # off-grid sizes pick the log-nearest entry and scale linearly
+    assert table.encode_us("zen", 1 << 11, 0.01) == pytest.approx(20.0)
+    assert table.encode_us("zen", 1 << 15, 0.01) == pytest.approx(320.0)
+
+
+# ---------------------------------------------------------------------------
+# 3. persistence + calibrator smoke
+# ---------------------------------------------------------------------------
+
+def test_json_round_trip(tmp_path):
+    table = _synthetic_table(123.5)
+    table.meta = {"backend": "xla", "host": "ci"}
+    path = tmp_path / "calib.json"
+    table.save(path)
+    loaded = cm.CalibrationTable.load(path)
+    assert loaded.entries == table.entries
+    assert loaded.meta == table.meta
+
+
+def test_version_mismatch_rejected(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text(json.dumps({"version": 999, "entries": []}))
+    with pytest.raises(ValueError, match="version"):
+        cm.CalibrationTable.load(path)
+
+
+def test_cost_calibrator_measures_and_round_trips(tmp_path):
+    cal = cm.CostCalibrator(n=2, sizes=(1024,), densities=(0.05,),
+                            iters=1, warmup=1)
+    table = cal.measure()
+    assert len(table.entries) == 1
+    e = table.entries[0]
+    for key in ("backend", "size", "density", "n",
+                "encode_us", "commit_us", "zen_us", "dense_us"):
+        assert key in e, key
+    assert e["encode_us"] > 0.0
+    assert e["dense_us"] > 0.0
+    assert e["commit_us"] >= 0.0
+    path = tmp_path / "measured.json"
+    table.save(path)
+    assert cm.CalibrationTable.load(path).entries == table.entries
+
+
+def test_cost_calibrator_rejects_degenerate_axis():
+    with pytest.raises(ValueError):
+        cm.CostCalibrator(n=1)

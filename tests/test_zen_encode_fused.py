@@ -1,0 +1,150 @@
+"""Kernel-parity matrix for the fused Zen encode (DESIGN.md §11).
+
+The contract: the fused single-dispatch encode — megakernel on TPU, its
+interpret-mode emulation, and the single-executable XLA composition the
+dispatch layer uses off-TPU — is BIT-EXACT against both oracles:
+
+  * ``zen_encode_unfused``: the pre-fusion 3-dispatch chain
+    (hash_stage kernel + XLA conflict rounds + row_compact kernel +
+    bitmap_pack kernel), and
+  * ``ref.zen_encode_ref``: the pure-XLA reference composition.
+
+The matrix covers density {0.01, 0.1, 1.0} x bucket sizes including the
+serial-memory overflow edge (tiny r1/r2 with ovf > 0 — overflow counting
+must agree, not just the surviving indices), the nnz-adaptive lane-budget
+branches of the dispatch's ``lax.switch``, and dtype {f32, bf16} at the
+``schemes.zen_encode`` level (indices are dtype-free; gathered values are
+not).  CI runs this as the ``kernel-parity`` job.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import schemes
+from repro.core.hashing import EMPTY, compact_indices, make_seeds
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def _cap(M: int, density: float) -> int:
+    """The layout recipe's index capacity: 4x the expected nnz, padded to
+    the 128-lane boundary, clamped to the tensor."""
+    cap = max(int(M * min(1.0, max(4.0 * density, 8.0 / M))), 8)
+    return min(-(-cap // 128) * 128, -(-M // 128) * 128)
+
+
+def _indices(M: int, density: float, cap: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    mask = rng.random(M) < density
+    g = jnp.asarray(np.where(mask, rng.standard_normal(M), 0.0),
+                    jnp.float32)
+    return compact_indices(g != 0, cap)[0]
+
+
+def _seeds() -> tuple:
+    return tuple(int(s) for s in np.asarray(make_seeds(0, 4)))
+
+
+def _arms(idx, seeds, n, r1, r2):
+    """All four encode routes: fused dispatch, forced interpret-mode
+    megakernel, 3-dispatch chain, pure-XLA reference."""
+    return {
+        "fused": kops.zen_encode_fused_op(idx, seeds, n, r1, r2),
+        "kernel": kops.zen_encode_fused_op(idx, seeds, n, r1, r2,
+                                           force_kernel=True),
+        "unfused": kops.zen_encode_unfused(idx, seeds, n, r1, r2),
+        "ref": kref.zen_encode_ref(idx, seeds, n, r1, r2),
+    }
+
+
+def _assert_parity(arms: dict):
+    pidx0, occ0, ovf0 = arms["ref"]
+    total0 = int(np.sum(np.asarray(ovf0)))
+    for name in ("fused", "kernel", "unfused"):
+        pidx, occ, ovf = arms[name]
+        np.testing.assert_array_equal(
+            np.asarray(pidx), np.asarray(pidx0), err_msg=f"{name}: pidx")
+        np.testing.assert_array_equal(
+            np.asarray(occ), np.asarray(occ0), err_msg=f"{name}: occ")
+        assert int(np.sum(np.asarray(ovf))) == total0, f"{name}: overflow"
+    return total0
+
+
+# ---------------------------------------------------------------------------
+# ops-level matrix: density x bucket size, plus the overflow edge
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,n,r1,r2,density", [
+    (1 << 12, 4, 512, 64, 0.01),
+    (1 << 12, 8, 128, 16, 0.1),
+    (1 << 14, 8, 192, 24, 0.01),   # the bench gate's operating point
+    (1 << 12, 4, 512, 64, 1.0),    # fully dense input, ample memory
+])
+def test_parity_matrix(M, n, r1, r2, density):
+    idx = _indices(M, density, _cap(M, density))
+    _assert_parity(_arms(idx, _seeds(), n, r1, r2))
+
+
+@pytest.mark.parametrize("M,n,r1,r2,density", [
+    (512, 2, 16, 4, 1.0),          # dense input into tiny memory
+    (1 << 12, 4, 32, 4, 0.5),      # serial region saturates
+])
+def test_parity_overflow_edge(M, n, r1, r2, density):
+    """Undersized r1/r2: every route must agree on WHICH indices survive
+    and HOW MANY overflow — the edge where a fused reimplementation is
+    easiest to get subtly wrong."""
+    idx = _indices(M, density, _cap(M, density))
+    total = _assert_parity(_arms(idx, _seeds(), n, r1, r2))
+    assert total > 0, "edge config no longer overflows; shrink r1/r2"
+
+
+def test_fused_dispatch_lane_budget_branches():
+    """The off-TPU fused dispatch slices its lane budget from the live
+    nnz (lax.switch over {cap, cap/2, cap/4}); every branch and boundary
+    must stay bit-exact — trailing EMPTY candidates can never win a slot,
+    take a serial rank, or overflow."""
+    M, n, r1, r2, cap = 1 << 12, 4, 128, 16, 512
+    seeds = _seeds()
+    rng = np.random.default_rng(7)
+    for nnz in (0, 1, cap // 4 - 1, cap // 4, cap // 4 + 1,
+                cap // 2, cap // 2 + 1, cap):
+        idx_np = np.full(cap, EMPTY, np.int32)
+        idx_np[:nnz] = np.sort(rng.choice(M, nnz, replace=False))
+        idx = jnp.asarray(idx_np)
+        arms = _arms(idx, seeds, n, r1, r2)
+        _assert_parity(arms)
+
+
+# ---------------------------------------------------------------------------
+# schemes-level matrix: dtype x density on ZenEncoded (values included)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("density", [0.01, 0.1, 1.0])
+def test_schemes_zen_encode_parity(dtype, density):
+    """pallas-fused == pallas-unfused == xla on every ZenEncoded field,
+    including the gathered values in both wire dtypes."""
+    M, n = 1 << 12, 4
+    lo = schemes.make_zen_layout(M, n, density_budget=min(0.5, 4 * density))
+    rng = np.random.default_rng(3)
+    mask = rng.random(M) < density
+    g = jnp.asarray(np.where(mask, rng.standard_normal(M), 0.0),
+                    jnp.float32).astype(dtype)
+    encs = {
+        "pallas_fused": schemes.zen_encode(
+            g, layout=lo, backend="pallas", fused=True),
+        "pallas_unfused": schemes.zen_encode(
+            g, layout=lo, backend="pallas", fused=False),
+    }
+    base = schemes.zen_encode(g, layout=lo, backend="xla")
+    for tag, enc in encs.items():
+        np.testing.assert_array_equal(
+            np.asarray(enc.pidx), np.asarray(base.pidx),
+            err_msg=f"{tag}: pidx")
+        np.testing.assert_array_equal(
+            np.asarray(enc.pval), np.asarray(base.pval),
+            err_msg=f"{tag}: pval")
+        assert enc.pval.dtype == dtype, tag
+        assert int(enc.overflow) == int(base.overflow), tag
