@@ -7,7 +7,7 @@ PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 # formatter and reflowing it would bury real diffs)
 FORMATTED := src/repro/train/schedule.py benchmarks/check_regression.py
 
-.PHONY: test test-crossmesh test-hier lint check-bytecode bench-smoke bench-gate ci
+.PHONY: test test-crossmesh test-hier lint check-bytecode check-registry bench-smoke bench-gate ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -52,6 +52,13 @@ lint:
 		echo "ruff not installed; skipping lint (CI runs it)"; \
 	fi
 
+# registry coverage (DESIGN.md §12): every registered scheme must carry
+# a volume and a rounds function that evaluate sanely, and every
+# executable scheme must appear in a tier-1 test — a scheme cannot be
+# added without a parity test riding along
+check-registry:
+	$(PY) -m repro.core.registry --check-tests tests
+
 # fast benchmark smoke: Table 1 + Fig. 7 analytics + the zen_sync
 # micro-benchmark that refreshes BENCH_sync.json
 bench-smoke:
@@ -73,4 +80,4 @@ bench-baseline:
 	$(PY) -m benchmarks.micro_sync --smoke --json BENCH_smoke.json
 	$(PY) -m benchmarks.merge_baseline BENCH_sync.json BENCH_smoke.json
 
-ci: lint check-bytecode test bench-smoke
+ci: lint check-bytecode check-registry test bench-smoke

@@ -34,7 +34,10 @@ committed the baseline), and each entry is judged against that scale:
   within-run fused/unfused ratio, against the ABSOLUTE acceptance bar
   (fused <= 0.5x the 3-dispatch encode at density <= 0.01, DESIGN.md
   §11) rather than the baseline's ratio — the bar is the PR's
-  contract, not a trajectory.
+  contract, not a trajectory;
+* ``balanced_ab`` skew entries are gated absolutely on the fresh run's
+  deterministic wire volumes: balanced's bottleneck worker must not
+  out-ship agsparse's under full skew (DESIGN.md §12).
 
 Only wall-time is gated with a tolerance.  Wire volumes (``sent_words``
 and friends) are deterministic, so any drift there is compared exactly
@@ -127,6 +130,33 @@ def _gate_encode_fused(new: dict) -> list:
     return out
 
 
+def _gate_balanced_skew(new: dict) -> list:
+    """The balanced scheme's acceptance bar (DESIGN.md §12): under full
+    skew (one worker holds every nonzero) the bottleneck worker's wire
+    volume must not exceed agsparse's — the regime where even-range
+    provisioning degrades to n * nnz_max is exactly where the rebalance
+    must win.  Wire volumes are deterministic, so this is judged
+    absolutely on the fresh run, never cross-run."""
+    pairs: dict = {}
+    for r in new.values():
+        if r.get("stage") != "balanced_ab" or r.get("arm") != "skew":
+            continue
+        pairs.setdefault(r.get("density"), {})[r.get("scheme")] = \
+            r.get("sent_words")
+    out = []
+    for density in sorted(pairs, key=str):
+        arms = pairs[density]
+        if not arms.get("agsparse") or arms.get("balanced") is None:
+            continue
+        if arms["balanced"] > arms["agsparse"]:
+            out.append(
+                f"balanced/agsparse skew wire[d={density}]: "
+                f"{arms['balanced']:.0f} > {arms['agsparse']:.0f} words "
+                f"(rebalance win lost)"
+            )
+    return out
+
+
 def compare(
     baseline: dict, fresh: dict, tolerance: float, min_us: float = 30000.0
 ) -> int:
@@ -166,6 +196,7 @@ def compare(
             improvements.append(line)
     regressions += _gate_bucketed_pairs(base, new, tolerance)
     regressions += _gate_encode_fused(new)
+    regressions += _gate_balanced_skew(new)
     tol_pct = f"{tolerance:.0%}"
     print(f"bench gate: {len(shared)} entries compared, tolerance {tol_pct}")
     print(f"  host-speed scale (median new/baseline ratio): {scale:.2f}x")

@@ -37,6 +37,7 @@ from benchmarks.common import (
 )
 from repro.core import formats, metrics, schemes
 from repro.core.hashing import compact_indices, extract_partitions, hierarchical_hash
+from repro.core.registry import BALANCED_BINS
 
 M = 1 << 14          # scaled tensor (volumes scale linearly; see common.py)
 N = 4                # simulated workers
@@ -126,6 +127,9 @@ def bench_end_to_end(results: list, densities=DENSITIES) -> None:
              dict(n=N, block=16, cap_push=max(8, cap // 8),
                   cap_pull=max(8, cap // 8)),
              "omnireduce", density, "xla"),
+            (f"balanced[d={density}]", schemes.balanced_sync,
+             dict(n=N, cap_push=cap, cap_pull=cap),
+             "balanced", density, "xla"),
         ] + [
             (f"zen[{b},d={density}]", schemes.zen_sync,
              dict(layout=layout, backend=b, interpret=None),
@@ -215,22 +219,20 @@ def bench_hier(results: list, densities=HIER_DENSITIES) -> None:
         _, st_flat = flat_run(vals)
         flat_words = float(np.asarray(st_flat.sent_words).mean())
 
-        lo_intra = schemes.make_zen_layout(
-            M, NODE_SIZE, density_budget=budget)
-        lo_inter = schemes.make_zen_layout(
-            M, N // NODE_SIZE,
-            density_budget=min(1.0, budget * NODE_SIZE))
-        cap = max(64, int(M * min(1.0, budget * NODE_SIZE)))
-        plans = {
-            "hier(zen@intra,zen@inter)": {0: dict(layout=lo_intra),
-                                          1: dict(layout=lo_inter)},
-            "hier(zen@intra,agsparse@inter)": {0: dict(layout=lo_intra),
-                                               1: dict(capacity=cap)},
-            "hier(dense@intra,dense@inter)": {},
-        }
+        # per-stage provisioning routed through the shared StageArgs
+        # builder: capacity growth across the intra merge and zen layout
+        # sizing computed in ONE place (schemes.plan_stage_args), the
+        # same code path GradSync uses — not re-derived per harness
+        tags = (
+            "hier(zen@intra,zen@inter)",
+            "hier(zen@intra,agsparse@inter)",
+            "hier(dense@intra,dense@inter)",
+        )
         best_inter = None
-        for tag, stage_kw in plans.items():
+        for tag in tags:
             plan = tpg.parse_plan(tag)
+            stage_kw = schemes.plan_stage_args(plan, topo, M,
+                                               density_budget=budget)
             run = jax.jit(functools.partial(
                 schemes.simulate_hier, topology=topo, plan=plan,
                 stage_kw=stage_kw))
@@ -261,6 +263,64 @@ def bench_hier(results: list, densities=HIER_DENSITIES) -> None:
 ENC_N = 8                        # the fused-encode gate's host mesh size
 ENC_DENSITIES = (0.01, 0.05)     # smoke keeps 0.01: the gate's bar
 ENC_RATIO_BAR = 0.5              # fused <= 0.5x the 3-dispatch at d<=0.01
+
+
+BAL_DENSITIES = (0.01, 0.1)    # both modes: the skew bar (§12) every run
+
+
+def bench_balanced(results: list, densities=BAL_DENSITIES) -> None:
+    """Balanced (Ok-Topk family) vs agsparse A/B under uniform and
+    fully-skewed nonzeros (DESIGN.md §12).  Provisioning is the point:
+    balanced's buffers follow the skew-independent balanced bound
+    (total/n + one-bin slack) while agsparse must size its allgather
+    for the worst worker (nnz_max — the whole total under full skew).
+    The acceptance bar asserted here and re-enforced by
+    check_regression: the bottleneck worker's wire volume under full
+    skew must not exceed agsparse's; the recorded sent_words are
+    deterministic and exact-gated (VOLUME_KEYS)."""
+    rng = np.random.default_rng(7)
+    for density in densities:
+        total = int(N * M * density)
+        bal_cap = total // N + min(total, N * (M // BALANCED_BINS))
+        for arm in ("uniform", "skew"):
+            g = np.zeros((N, M), np.float32)
+            if arm == "uniform":
+                nnz_max = total // N
+                for i in range(N):
+                    pos = rng.choice(M, size=nnz_max, replace=False)
+                    g[i, pos] = rng.standard_normal(nnz_max).astype(np.float32)
+            else:
+                nnz_max = total
+                pos = rng.choice(M, size=total, replace=False)
+                g[0, pos] = rng.standard_normal(total).astype(np.float32)
+            vals = jnp.asarray(g)
+            sent = {}
+            for scheme, fn, kw in (
+                ("balanced", schemes.balanced_sync,
+                 dict(n=N, cap_push=bal_cap, cap_pull=bal_cap)),
+                ("agsparse", schemes.agsparse_sync, dict(capacity=nnz_max)),
+            ):
+                run = jax.jit(functools.partial(schemes.simulate, fn, **kw))
+                _, st = run(vals)
+                ov = int(np.asarray(st.overflow).sum())
+                assert ov == 0, (scheme, arm, density)
+                sent[scheme] = float(np.asarray(st.sent_words).max())
+                _record(
+                    results, f"balanced_ab[{scheme},{arm},d={density}]",
+                    time_fn(run, vals),
+                    stage="balanced_ab", scheme=scheme, arm=arm,
+                    density=density, backend="xla",
+                    sent_words=sent[scheme], overflow=ov)
+            if arm == "skew":
+                assert sent["balanced"] <= sent["agsparse"], (
+                    f"balanced moves {sent['balanced']:.0f} words at full "
+                    f"skew (d={density}), more than agsparse's "
+                    f"{sent['agsparse']:.0f} — the rebalance must win "
+                    f"exactly where even-range provisioning degrades "
+                    f"(DESIGN.md §12)")
+            emit(f"micro_sync/balanced_vs_agsparse[{arm},d={density}]", 0.0,
+                 f"balanced/agsparse="
+                 f"{sent['balanced'] / sent['agsparse']:.2f}x")
 
 
 def bench_encode_fused(results: list, densities=ENC_DENSITIES) -> None:
@@ -403,9 +463,11 @@ def main(argv=()) -> None:
         bench_stages(results)
         bench_end_to_end(results, densities)
         bench_bucketed(results, densities)
-        # hier keeps BOTH densities in smoke mode: the inter-level wire
-        # bar must hold on every CI bench-gate run
+        # hier and balanced keep BOTH densities in smoke mode: the
+        # inter-level wire bar and the balanced-vs-agsparse skew bar
+        # must hold on every CI bench-gate run
         bench_hier(results)
+        bench_balanced(results)
         bench_compress(results, compress_densities)
         bench_encode_fused(results, enc_densities)
         for r in results:

@@ -3,7 +3,13 @@
 1. Build skewed sparse gradients on 8 simulated workers.
 2. Synchronize them with Zen (hierarchical hashing + hash bitmap).
 3. Verify exactness vs dense allreduce and compare wire volume.
-4. Induce sparsity on DENSE gradients with error-feedback top-k
+4. Rerun under FULL skew (one worker holds every nonzero) with the
+   balanced Ok-Topk-style scheme (``--sync balanced`` on
+   ``launch/train.py`` / ``launch/dryrun.py``): its histogram
+   rebalance bounds every worker's buffers by nnz_total/n + one-bin
+   slack — no nnz_max term — where agsparse must provision the whole
+   total (DESIGN.md §12).
+5. Induce sparsity on DENSE gradients with error-feedback top-k
    (``--compress``) and watch 'auto' route them through Zen.
 
 Dense models have nothing naturally sparse to ship — ``--compress
@@ -61,6 +67,33 @@ print(f"wire volume: zen={zen_words:,.0f} words, "
       f"allreduce={dense_words:,.0f} words "
       f"-> {dense_words / zen_words:.1f}x less traffic")
 assert err < 1e-5
+
+# --- balanced under full skew (--sync balanced) -------------------------
+from repro.core.registry import BALANCED_BINS  # noqa: E402
+
+nnz_total = int(TENSOR * DENSITY)
+skewed = np.zeros((N_WORKERS, TENSOR), np.float32)
+hot = np.random.default_rng(0).choice(TENSOR, nnz_total, replace=False)
+skewed[0, hot] = 1.0                      # ONE worker holds every nonzero
+skewed = jnp.asarray(skewed)
+bal_cap = nnz_total // N_WORKERS \
+    + min(nnz_total, N_WORKERS * (TENSOR // BALANCED_BINS))
+bal_out, bal_stats = schemes.simulate(
+    schemes.balanced_sync, skewed, n=N_WORKERS,
+    cap_push=bal_cap, cap_pull=bal_cap)
+ags_out, ags_stats = schemes.simulate(
+    schemes.agsparse_sync, skewed, capacity=nnz_total)  # needs nnz_max!
+assert int(np.asarray(bal_stats.overflow).sum()) == 0
+np.testing.assert_allclose(np.asarray(bal_out),
+                           np.asarray(skewed.sum(0))[None]
+                           .repeat(N_WORKERS, 0), atol=1e-5)
+bal_max = float(np.asarray(bal_stats.sent_words).max())
+ags_max = float(np.asarray(ags_stats.sent_words).max())
+print(f"full skew, {nnz_total} nonzeros all on worker 0: "
+      f"balanced bottleneck={bal_max:,.0f} words "
+      f"(buffers {bal_cap}/worker, skew-independent) vs "
+      f"agsparse={ags_max:,.0f} (capacity must be nnz_max={nnz_total}) "
+      f"-> {ags_max / bal_max:.1f}x less at the bottleneck")
 
 # --- induced sparsity: EF top-k on a DENSE gradient tree ----------------
 from repro.core.zen import GradSync, SyncConfig  # noqa: E402

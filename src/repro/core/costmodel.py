@@ -16,11 +16,14 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
+from collections.abc import Mapping
 from typing import Callable
 
 import numpy as np
 
 from repro.core import metrics
+from repro.core import registry as _registry
+from repro.core.registry import BALANCED_BINS
 from repro.core.topology import (
     CommPlan,
     Level,
@@ -143,6 +146,16 @@ def balanced_parallelism(p: SparsityProfile, n: int) -> float:
     return (1 + p.vw) * (n - 1) * (p.d(1) + p.d(n)) * p.M / n
 
 
+def balanced(p: SparsityProfile, n: int) -> float:
+    """Executable Ok-Topk-style balanced split-and-exchange
+    (``schemes.balanced_sync``): the histogram rebalance makes skew 1 by
+    construction, so push + pull are exactly ``balanced_parallelism``'s
+    optimal COO terms — note no ``s(n)`` factor, unlike ``sparse_ps`` —
+    plus the B-bin boundary histogram's f32 allreduce."""
+    bins = min(p.M, BALANCED_BINS)
+    return balanced_parallelism(p, n) + 2 * (n - 1) / n * bins
+
+
 def zen(p: SparsityProfile, n: int) -> float:
     """Balanced Parallelism + hash bitmap on Pull (§3.2.2):
     push COO (low density), pull values + M/32-word bitmap (Thm. 3)."""
@@ -166,30 +179,83 @@ def lower_bound(p: SparsityProfile, n: "int | Topology") -> float:
     return p.d(n - 1) * p.M * p.vw if n > 1 else 0.0
 
 
-SCHEMES: dict[str, Callable[[SparsityProfile, int], float]] = {
-    "dense": dense_allreduce,
-    "agsparse": agsparse,
-    "sparcml": sparcml,
-    "sparse_ps": sparse_ps,
-    "omnireduce": omnireduce,
-    "balanced_parallelism": balanced_parallelism,
-    "zen": zen,
-    "lower_bound": lower_bound,
-}
+class _RegistryView(Mapping):
+    """Live mapping {scheme name -> registered fn}: the historical
+    ``SCHEMES`` / ``ROUNDS`` dict API, now backed by the scheme registry
+    (single registration surface — repro.core.registry)."""
 
-# Message-round counts per scheme — the α (latency) term of the α-β link
-# model.  A ring allreduce is 2(n-1) rounds; an all_gather ring n-1; a2a
-# push + all_gather pull schemes pay both; recursive doubling log2 n.
-ROUNDS: dict[str, Callable[[int], float]] = {
-    "dense": lambda n: 2.0 * (n - 1),
-    "agsparse": lambda n: float(n - 1),
-    "sparcml": lambda n: float(math.ceil(math.log2(max(n, 2)))),
-    "sparse_ps": lambda n: 2.0 * (n - 1),
-    "omnireduce": lambda n: 2.0 * (n - 1),
-    "balanced_parallelism": lambda n: 2.0 * (n - 1),
-    "zen": lambda n: 2.0 * (n - 1),
-    "lower_bound": lambda n: 1.0,
-}
+    def __init__(self, attr: str):
+        self._attr = attr
+
+    def __getitem__(self, name: str) -> Callable:
+        return getattr(_registry.get_scheme(name), self._attr)
+
+    def __iter__(self):
+        return iter(_registry.registered_schemes())
+
+    def __len__(self) -> int:
+        return len(_registry.registered_schemes())
+
+
+# Volume formulas per scheme name (words received per GPU), and the
+# message-round counts — the α (latency) term of the α-β link model.  A
+# ring allreduce is 2(n-1) rounds; an all_gather ring n-1; a2a push +
+# all_gather pull schemes pay both; recursive doubling log2 n; balanced
+# additionally pays its histogram allreduce.  Both mappings are views
+# over the registry (registrations at the bottom of this module).
+SCHEMES: Mapping[str, Callable[[SparsityProfile, int], float]] = \
+    _RegistryView("volume_fn")
+ROUNDS: Mapping[str, Callable[[int], float]] = _RegistryView("rounds_fn")
+
+
+# --- scheme registrations (the single surface — DESIGN.md §12) -------------
+# Order matters twice: ``plan_candidates`` keeps registration order, so
+# dense must come first (argmin ties resolve dense) and balanced last
+# (a new candidate must not steal exact ties from the historical set).
+# ``sync_fn`` strings resolve lazily on repro.core.schemes: this module
+# stays importable without jax (analysis-only rigs).
+
+_registry.register_scheme(
+    "dense", "dense_sync", dense_allreduce, lambda n: 2.0 * (n - 1),
+    plan_candidate=True)
+_registry.register_scheme(
+    "zen", "zen_sync", zen, lambda n: 2.0 * (n - 1),
+    stage_args=("layout", "use_hash_bitmap", "backend", "interpret", "fused"),
+    required_args=("layout",), plan_candidate=True)
+_registry.register_scheme(
+    "agsparse", "agsparse_sync", agsparse, lambda n: float(n - 1),
+    stage_args=("capacity",), required_args=("capacity",),
+    plan_candidate=True)
+_registry.register_scheme(
+    "sparcml", "sparcml_sync", sparcml,
+    lambda n: float(math.ceil(math.log2(max(n, 2)))),
+    stage_args=("capacity",), required_args=("capacity",), needs_n=True,
+    plan_candidate=True, feasible_fn=lambda n, M: n & (n - 1) == 0)
+_registry.register_scheme(
+    "sparse_ps", "sparse_ps_sync", sparse_ps, lambda n: 2.0 * (n - 1),
+    stage_args=("capacity", "cap_push", "cap_pull"),
+    required_args=(("cap_push", "capacity"), ("cap_pull", "capacity")),
+    arg_aliases=(("capacity", ("cap_push", "cap_pull")),),
+    needs_n=True, feasible_fn=lambda n, M: M % n == 0)
+_registry.register_scheme(
+    "omnireduce", "omnireduce_sync", omnireduce, lambda n: 2.0 * (n - 1),
+    stage_args=("capacity", "cap_push", "cap_pull", "block"),
+    required_args=(("cap_push", "capacity"), ("cap_pull", "capacity")),
+    arg_aliases=(("capacity", ("cap_push", "cap_pull")),),
+    arg_defaults=(("block", 8),), needs_n=True)
+_registry.register_scheme(
+    "balanced", "balanced_sync", balanced, lambda n: 4.0 * (n - 1),
+    stage_args=("capacity", "cap_push", "cap_pull", "bins"),
+    required_args=(("cap_push", "capacity"),),
+    arg_aliases=(("capacity", ("cap_push", "cap_pull")),),
+    needs_n=True, plan_candidate=True)
+# analytic-only curves (no executable collective): Fig. 7's optimum and
+# the information-theoretic floor
+_registry.register_scheme(
+    "balanced_parallelism", None, balanced_parallelism,
+    lambda n: 2.0 * (n - 1))
+_registry.register_scheme(
+    "lower_bound", None, lower_bound, lambda n: 1.0)
 
 
 # ---------------------------------------------------------------------------
@@ -239,33 +305,24 @@ def plan_time(plan: CommPlan, p: SparsityProfile, topo: Topology) -> float:
 
 def _feasible(scheme: str, n: int, M: int) -> bool:
     """Whether a scheme can run at a level of size ``n`` (static shape /
-    divisibility constraints from core/schemes.py)."""
-    if n <= 1:
-        return scheme == "dense"   # size-1 level: only the free identity
-    if scheme == "sparcml":
-        return n & (n - 1) == 0
-    if scheme == "sparse_ps":
-        return M % n == 0
-    return True
-
-
-# Per-level candidate schemes for hierarchical planning.  sparse_ps /
-# omnireduce are deliberately absent: they are the paper's imbalanced
-# strawmen and carry divisibility constraints — explicit tags can still
-# request them, the planner just never picks them.
-_HIER_CANDIDATES = ("dense", "zen", "agsparse", "sparcml")
+    divisibility constraints, registered on each SchemeSpec)."""
+    return _registry.get_scheme(scheme).feasible(n, M)
 
 
 def candidate_plans(topo: Topology, M: int = 0) -> list[CommPlan]:
-    """Every plan the hierarchical planner considers, dense-first (so an
-    argmin with ties resolves toward dense, matching ``choose_scheme``'s
-    flat tie-break)."""
+    """Every plan the planner considers, dense-first (so an argmin with
+    ties resolves toward dense, matching ``choose_scheme``'s flat
+    tie-break).  The candidate set is the registry's ``plan_candidate``
+    schemes in registration order; sparse_ps / omnireduce register as
+    non-candidates — they are the paper's imbalanced strawmen and carry
+    divisibility constraints — so explicit tags can still request them,
+    the planner just never picks them."""
+    cands = _registry.plan_candidates()
     if topo.flat:
-        return [flat_plan("dense"), flat_plan("zen")]
-    intra = [s for s in _HIER_CANDIDATES
-             if _feasible(s, topo.intra.size, M)]
-    inter = [s for s in _HIER_CANDIDATES
-             if _feasible(s, topo.inter.size, M)]
+        n = topo.intra.size
+        return [flat_plan(s) for s in cands if _feasible(s, n, M)]
+    intra = [s for s in cands if _feasible(s, topo.intra.size, M)]
+    inter = [s for s in cands if _feasible(s, topo.inter.size, M)]
     return [hier_plan(si, se) for si in intra for se in inter]
 
 

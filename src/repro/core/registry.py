@@ -1,0 +1,298 @@
+"""Scheme registry: the single surface a communication scheme plugs into.
+
+Before this module, adding a scheme meant editing five hand-maintained
+surfaces in lockstep: ``stage_sync``'s if/elif chain, the parallel
+``costmodel.SCHEMES`` / ``costmodel.ROUNDS`` dicts, the ``choose_plan``
+candidate tuple, and the hardcoded CLI ``choices=`` list in
+``launch/train.py``.  A :class:`SchemeSpec` registered once via
+:func:`register_scheme` now feeds all of them:
+
+* ``schemes.stage_sync`` dispatches through :func:`get_scheme` (the
+  executable ``sync_fn``, with per-scheme :class:`StageArgs` validation);
+* ``costmodel.SCHEMES`` / ``costmodel.ROUNDS`` are live views over the
+  registered ``volume_fn`` / ``rounds_fn``;
+* ``costmodel.candidate_plans`` (flat and hierarchical) filters on
+  ``plan_candidate`` + per-level feasibility;
+* ``topology.parse_plan`` rejects unregistered scheme names, listing the
+  registered ones;
+* ``launch/train.py`` / ``launch/dryrun.py`` derive ``--sync`` choices
+  from :func:`cli_scheme_choices`.
+
+Import contract: this module is pure python (no jax, no numpy) and the
+registrations live at the bottom of ``core/costmodel.py`` (which owns the
+volume/round formulas and is itself importable on analysis-only rigs).
+Executable sync functions are referenced *by name* and resolved lazily
+from ``repro.core.schemes`` at dispatch time, so registering a scheme
+never forces a jax import.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+# Histogram resolution of the balanced scheme's boundary rebalance: the
+# index space is split into min(M, BALANCED_BINS) equal-width bins whose
+# global multiset counts (one f32 allreduce) place the range boundaries.
+# Shared between the executable scheme (core/schemes.py) and its α-β
+# volume formula (core/costmodel.py) so claim and model cannot drift.
+BALANCED_BINS = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class StageArgs:
+    """Typed per-stage arguments for one ``stage_sync`` call.
+
+    One dataclass covers every scheme; a :class:`SchemeSpec` declares
+    which fields it consumes (``stage_args``) and which are mandatory
+    (``required_args``).  Setting a field a scheme does not consume is a
+    config error surfaced at plan-build time (:func:`validate_stage_args`),
+    in the style of ``make_ctx``'s ``validate_tp``.
+    """
+
+    capacity: int | None = None       # per-worker nnz budget (COO schemes)
+    cap_push: int | None = None       # per-destination push slots (PS family)
+    cap_pull: int | None = None       # aggregated-shard pull slots (PS family)
+    block: int | None = None          # omnireduce block size
+    bins: int | None = None           # balanced histogram bins (default: BALANCED_BINS)
+    layout: Any = None                # ZenLayout (zen only)
+    use_hash_bitmap: bool = True      # zen pull format (Fig. 18 ablation)
+    backend: str = "xla"              # zen compute route: "xla" | "pallas"
+    interpret: bool | None = None     # pallas interpret override (zen)
+    fused: bool | None = None         # zen fused-encode megakernel toggle
+
+    def set_fields(self) -> tuple[str, ...]:
+        """Names of fields set to a non-default value."""
+        return tuple(
+            f.name for f in dataclasses.fields(self)
+            if getattr(self, f.name) != f.default
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemeSpec:
+    """Everything the repo needs to know about one communication scheme.
+
+    ``sync_fn`` is the attribute name of the executable function on
+    ``repro.core.schemes`` (resolved lazily — see module docstring), or
+    ``None`` for analytic-only entries (``balanced_parallelism``,
+    ``lower_bound``) that exist purely as cost-model curves.
+    """
+
+    name: str
+    sync_fn: str | None                       # attr name on repro.core.schemes
+    volume_fn: Callable                       # (SparsityProfile, n) -> words
+    rounds_fn: Callable[[int], float]         # n -> message rounds (α term)
+    stage_args: tuple[str, ...] = ()          # StageArgs fields consumed
+    required_args: tuple = ()                 # names, or tuples = any-of groups
+    arg_aliases: tuple = ()                   # ((src, (dst, ...)), ...): src fills unset dsts
+    arg_defaults: tuple = ()                  # ((field, value), ...) when unset
+    needs_n: bool = False                     # sync_fn takes a static n kwarg
+    plan_candidate: bool = False              # choose_plan may pick it
+    feasible_fn: Callable[[int, int], bool] | None = None  # (n, M) -> bool
+
+    @property
+    def executable(self) -> bool:
+        return self.sync_fn is not None
+
+    def resolve_sync(self) -> Callable:
+        if self.sync_fn is None:
+            raise ValueError(
+                f"scheme {self.name!r} is analytic-only (a cost-model "
+                f"curve, not an executable collective); executable "
+                f"schemes: {', '.join(registered_schemes(executable_only=True))}")
+        from repro.core import schemes  # deferred: keep the registry jax-free
+
+        return getattr(schemes, self.sync_fn)
+
+    def feasible(self, n: int, M: int = 0) -> bool:
+        """Whether this scheme can run at a level of size ``n`` (static
+        shape / divisibility constraints)."""
+        if n <= 1:
+            return self.name == "dense"  # size-1 level: only the free identity
+        if self.feasible_fn is None:
+            return True
+        return self.feasible_fn(n, M)
+
+
+_REGISTRY: dict[str, SchemeSpec] = {}
+
+
+def register_scheme(
+    name: str,
+    sync_fn: str | None,
+    volume_fn: Callable,
+    rounds_fn: Callable[[int], float],
+    stage_args: tuple[str, ...] = (),
+    *,
+    required_args: tuple = (),
+    arg_aliases: tuple = (),
+    arg_defaults: tuple = (),
+    needs_n: bool = False,
+    plan_candidate: bool = False,
+    feasible_fn: Callable[[int, int], bool] | None = None,
+) -> SchemeSpec:
+    """Register one scheme.  Re-registering a name replaces it (tests)."""
+    valid = {f.name for f in dataclasses.fields(StageArgs)}
+    unknown = [a for a in stage_args if a not in valid]
+    if unknown:
+        raise ValueError(
+            f"register_scheme({name!r}): stage_args {unknown} are not "
+            f"StageArgs fields ({', '.join(sorted(valid))})")
+    spec = SchemeSpec(
+        name=name, sync_fn=sync_fn, volume_fn=volume_fn,
+        rounds_fn=rounds_fn, stage_args=tuple(stage_args),
+        required_args=tuple(required_args), arg_aliases=tuple(arg_aliases),
+        arg_defaults=tuple(arg_defaults), needs_n=needs_n,
+        plan_candidate=plan_candidate, feasible_fn=feasible_fn)
+    _REGISTRY[name] = spec
+    return spec
+
+
+def _ensure_registered() -> None:
+    """Populate the registry on first use.  The registrations live at the
+    bottom of ``core/costmodel.py`` (jax-free; owns the volume formulas)."""
+    if not _REGISTRY:
+        from repro.core import costmodel  # noqa: F401  (registration side effect)
+
+
+def get_scheme(name: str) -> SchemeSpec:
+    _ensure_registered()
+    spec = _REGISTRY.get(name)
+    if spec is None:
+        raise ValueError(
+            f"unknown scheme {name!r}: registered schemes are "
+            f"{', '.join(registered_schemes())} "
+            f"(add new ones via repro.core.registry.register_scheme)")
+    return spec
+
+
+def registered_schemes(*, executable_only: bool = False) -> tuple[str, ...]:
+    _ensure_registered()
+    return tuple(n for n, s in _REGISTRY.items()
+                 if s.executable or not executable_only)
+
+
+def plan_candidates() -> tuple[str, ...]:
+    """Schemes ``choose_plan`` may pick, in registration order (dense
+    first — argmin ties must resolve toward dense)."""
+    _ensure_registered()
+    return tuple(n for n, s in _REGISTRY.items() if s.plan_candidate)
+
+
+def cli_scheme_choices() -> list[str]:
+    """``--sync`` choices for launch/train.py and launch/dryrun.py: every
+    executable scheme plus the per-tensor 'auto' decision."""
+    return [*registered_schemes(executable_only=True), "auto"]
+
+
+def validate_stage_args(spec: SchemeSpec, args: StageArgs, where: str = "") -> None:
+    """Config-named errors for one stage's arguments, raised at
+    plan-build time (not from inside a jit trace)."""
+    ctx = f" ({where})" if where else ""
+    accepted = set(spec.stage_args)
+    stray = [f for f in args.set_fields() if f not in accepted]
+    if stray:
+        raise ValueError(
+            f"scheme {spec.name!r} does not consume stage arg(s) "
+            f"{', '.join(stray)}{ctx}; it accepts: "
+            f"{', '.join(spec.stage_args) or '(none)'}")
+    for req in spec.required_args:
+        alts = req if isinstance(req, tuple) else (req,)
+        if all(getattr(args, a) is None for a in alts):
+            raise ValueError(
+                f"scheme {spec.name!r} requires stage arg "
+                f"{' or '.join(alts)}{ctx} — size it from the density "
+                f"budget (see schemes.plan_stage_args / SyncConfig."
+                f"density_budget)")
+
+
+def stage_kwargs(spec: SchemeSpec, args: StageArgs) -> dict:
+    """The keyword arguments ``spec``'s sync function actually receives:
+    consumed fields only, aliases applied (e.g. ``capacity`` filling
+    ``cap_push``/``cap_pull``), per-scheme defaults filled, unset (None)
+    fields dropped so the function's own defaults apply."""
+    vals = {f: getattr(args, f) for f in spec.stage_args}
+    for src, dsts in spec.arg_aliases:
+        for d in dsts:
+            if vals.get(d) is None and vals.get(src) is not None:
+                vals[d] = vals[src]
+        vals.pop(src, None)
+    for field, default in spec.arg_defaults:
+        if vals.get(field) is None:
+            vals[field] = default
+    return {k: v for k, v in vals.items() if v is not None}
+
+
+# ---------------------------------------------------------------------------
+# Registry-coverage check (CI lint job + tests/test_registry_balanced.py)
+# ---------------------------------------------------------------------------
+
+def coverage_errors(tests_dir: str = "tests") -> list[str]:
+    """Every registered scheme must carry a volume and a rounds function
+    that evaluate sanely, and every *executable* scheme must appear in a
+    tier-1 test file (the parity-test requirement).  Returns a list of
+    violations (empty = covered)."""
+    import glob
+    import os
+
+    _ensure_registered()
+    from repro.core import costmodel as cm
+
+    # probe profile with every curve populated (block curves included —
+    # omnireduce's volume asserts on them)
+    p = cm.SparsityProfile(
+        M=1 << 12, d=lambda i: min(1.0, 0.1 * max(i, 1)),
+        s=lambda n: 1.0,
+        block_density=lambda i: min(1.0, 0.2 * max(i, 1)),
+        block_max=lambda i, parts: min(1.0, 0.2 * max(i, 1)))
+    corpus = ""
+    for path in sorted(glob.glob(os.path.join(tests_dir, "test_*.py"))):
+        with open(path) as f:
+            corpus += f.read()
+    errors = []
+    for name in registered_schemes():
+        spec = get_scheme(name)
+        try:
+            r = float(spec.rounds_fn(8))
+            v = float(spec.volume_fn(p, 8))
+        except Exception as e:  # pragma: no cover - defensive
+            errors.append(f"{name}: volume/rounds evaluation failed: {e}")
+            continue
+        if not (r > 0):
+            errors.append(f"{name}: rounds_fn(8) = {r} (must be > 0)")
+        if not (v >= 0):
+            errors.append(f"{name}: volume_fn(p, 8) = {v} (must be >= 0)")
+        if spec.executable and f'"{name}"' not in corpus \
+                and f"'{name}'" not in corpus \
+                and (spec.sync_fn or "") not in corpus:
+            errors.append(
+                f"{name}: executable scheme has no tier-1 parity test "
+                f"(no test under {tests_dir}/ mentions it)")
+    return errors
+
+
+def _main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="repro.core.registry",
+        description="Registry-coverage check: every registered scheme has "
+                    "volume, rounds, and (if executable) a tier-1 parity "
+                    "test.  CI's lint job runs this (make check-registry).")
+    ap.add_argument("--check-tests", default="tests",
+                    help="directory of tier-1 tests to scan")
+    args = ap.parse_args(argv)
+    errors = coverage_errors(args.check_tests)
+    names = registered_schemes()
+    for e in errors:
+        print(f"REGISTRY ERROR: {e}")
+    print(f"registry coverage: {len(names)} schemes "
+          f"({', '.join(names)}) — "
+          f"{'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(_main())

@@ -14,15 +14,24 @@ A scheme's capacity requirement *is* its traffic claim — imbalanced schemes
 balanced ones provision ``nnz/n``; overflow counters surface under-provisioning
 instead of silently corrupting gradients.
 
-Schemes (Table 2):
+Schemes (Table 2, plus the Ok-Topk family):
   dense_sync        Ring + incremental + parallelism + balanced (psum).
   agsparse_sync     AllGather of COO (one-shot, centralization).
   sparcml_sync      SSAR recursive-doubling, incremental, centralization.
   sparse_ps_sync    P2P + one-shot + parallelism, even-range partition
                     (imbalanced).
   omnireduce_sync   As Sparse PS but with the tensor-block format.
+  balanced_sync     Ok-Topk-style load-balanced split-and-exchange: a
+                    histogram rebalance sizes the index ranges so the
+                    per-worker receive volume is O(nnz_global/n + bins)
+                    regardless of skew (arXiv 2201.07598).
   zen_sync          Balanced Parallelism via hierarchical hashing + hash
                     bitmap — the paper's contribution.
+
+Dispatch is by the scheme registry (``repro.core.registry``): every
+scheme registers its executable, volume/round formulas, and typed
+``StageArgs`` exactly once (at the bottom of ``core/costmodel.py``);
+``stage_sync`` and the planner both read that single record.
 """
 from __future__ import annotations
 
@@ -37,6 +46,8 @@ import numpy as np
 from jax import lax
 
 from repro.core import formats
+from repro.core import registry as sreg
+from repro.core.registry import BALANCED_BINS, StageArgs
 from repro.core.hashing import (
     EMPTY,
     compact_indices,
@@ -267,6 +278,102 @@ def omnireduce_sync(
             + (n - 1) * _nnz(pull.block_ids)) * wpb
     overflow = jnp.sum(blk.overflow) + pull.overflow
     return out, SyncStats(sent_words=sent, overflow=overflow)
+
+
+# ---------------------------------------------------------------------------
+# Balanced split-and-exchange (Ok-Topk family, arXiv 2201.07598)
+# ---------------------------------------------------------------------------
+
+def balanced_sync(
+    dense: jnp.ndarray, *, axis: str, n: int, cap_push: int,
+    cap_pull: int | None = None, bins: int | None = None,
+) -> tuple[jnp.ndarray, SyncStats]:
+    """Load-balanced split-and-exchange allreduce.
+
+    Where ``sparse_ps_sync`` partitions the index space into *even*
+    contiguous ranges (so skewed nonzeros concentrate on few servers and
+    correct provisioning costs ``skew x nnz/n`` — O(n·nnz_max) at full
+    skew), this scheme *rebalances* the range boundaries per step:
+
+    1. Compact local nonzero indices (budget ``cap_push``).
+    2. Build a ``min(M, bins)``-bin equal-width histogram of the global
+       nonzero multiset — one f32 allreduce of the local histograms.
+    3. Assign contiguous bin ranges to destinations by the exclusive
+       cumulative count: ``dest(j) = floor(cum(j) * n / total)``.  Every
+       destination's range then holds at most ``total/n + max_bin``
+       multiset entries — the balanced receive bound O(nnz_global/n +
+       bin granularity), independent of skew.
+    4. Split local nonzeros by destination, ``all_to_all`` the COO
+       (global indices — no per-range offset bookkeeping), scatter-add
+       into a length-M buffer, compact the aggregated range
+       (``cap_pull``, default ``cap_push``), ``all_gather`` the reduced
+       shards.
+
+    Unlike zen there is no precomputed layout: the partition is a pure
+    function of this step's histogram, so MoE-style routing shifts are
+    absorbed step by step at the price of the histogram allreduce
+    (``2 (n-1)/n * bins`` words, charged to ``sent_words``).
+    """
+    M = dense.shape[0]
+    if cap_pull is None:
+        cap_pull = cap_push
+    B = min(M, bins or BALANCED_BINS)
+    bw = -(-M // B)  # bin width (ceil), last bin may be ragged
+    vw = _vwidth(dense)
+    my_rank = lax.axis_index(axis)
+
+    # --- 1. local compaction -------------------------------------------------
+    # total sendable budget is n * cap_push (cap_push slots per
+    # destination); the split below redistributes, it cannot grow
+    cap_local = n * cap_push
+    idx, ov_c = compact_indices(_mask(dense), cap_local)
+    live = idx != EMPTY
+    bin_of = jnp.where(live, jnp.where(live, idx, 0) // bw, B)
+
+    # --- 2. global multiset histogram (f32 allreduce: counts < 2^24 exact) ---
+    local_hist = jnp.zeros((B,), jnp.float32).at[bin_of].add(1.0, mode="drop")
+    hist = lax.psum(local_hist, axis)
+    hist_words = jnp.float32(2 * (n - 1) / n) * B
+
+    # --- 3. balanced contiguous bin -> destination assignment ----------------
+    cum = jnp.cumsum(hist)
+    total = jnp.maximum(cum[-1], 1.0)
+    excl = cum - hist                     # exclusive prefix counts
+    dest_of_bin = jnp.clip(
+        (excl * n / total).astype(jnp.int32), 0, n - 1)
+    dest = jnp.where(live, dest_of_bin[jnp.clip(bin_of, 0, B - 1)], n)
+
+    # --- 4. per-destination split + exchange ---------------------------------
+    member = dest[None, :] == jnp.arange(n, dtype=jnp.int32)[:, None]
+    lpos, ov_s = compact_rows(member, cap_push)           # [n, cap_push]
+    pidx = jnp.where(lpos == EMPTY, EMPTY,
+                     idx[jnp.clip(lpos, 0, cap_local - 1)])
+    pval = _gather_rows(dense, pidx)
+    got_idx = lax.all_to_all(pidx, axis, split_axis=0, concat_axis=0)
+    got_val = lax.all_to_all(pval, axis, split_axis=0, concat_axis=0)
+
+    # --- server aggregation over the full index space (global indices) -------
+    buf = jnp.zeros_like(dense)
+    buf = _scatter_add(buf, got_idx.reshape(-1),
+                       got_val.reshape(-1, *dense.shape[1:]))
+
+    # --- pull: compact the aggregated range, allgather the reduced shards ----
+    pull_idx, ov_p = compact_indices(_mask(buf), cap_pull)
+    pull_val = _gather_rows(buf, pull_idx)
+    all_idx = lax.all_gather(pull_idx, axis)              # [n, cap_pull]
+    all_val = lax.all_gather(pull_val, axis)
+    out = jnp.zeros_like(dense)
+    out = _scatter_add(out, all_idx.reshape(-1),
+                       all_val.reshape(-1, *dense.shape[1:]))
+
+    nnz_per_dest = jnp.sum(pidx != EMPTY, axis=1).astype(jnp.float32)
+    push_sent = (jnp.sum(nnz_per_dest) - nnz_per_dest[my_rank]) * (1 + vw)
+    pull_sent = (n - 1) * _nnz(pull_idx) * (1 + vw)
+    stats = SyncStats(
+        sent_words=push_sent + pull_sent + hist_words,
+        overflow=ov_c + jnp.sum(ov_s) + ov_p,
+    )
+    return out, stats
 
 
 # ---------------------------------------------------------------------------
@@ -560,37 +667,118 @@ def zen_sync(
 
 def stage_sync(
     scheme: str, dense: jnp.ndarray, *, axis: str, n: int,
-    capacity: int | None = None, layout: ZenLayout | None = None,
-    use_hash_bitmap: bool = True, backend: str = "xla",
-    interpret: bool | None = None, fused: bool | None = None, block: int = 8,
-    cap_push: int | None = None, cap_pull: int | None = None,
+    stage_args: StageArgs | None = None, **kw,
 ) -> tuple[jnp.ndarray, SyncStats]:
     """Run one scheme over one named axis — the uniform entry the
     CommPlan interpreter (``hier_sync``) and the bucket committer
-    (``core/zen.py``) dispatch through.  Capacity knobs are the caller's:
+    (``core/zen.py``) dispatch through.
+
+    Dispatch is registry-driven (``repro.core.registry``): the scheme's
+    :class:`SchemeSpec` names the executable function, the
+    :class:`StageArgs` fields it consumes, and which are mandatory.
+    Callers pass either a typed ``stage_args`` or loose keyword
+    arguments (collected into one); validation raises config-named
+    ValueErrors *before* the trace, so a mis-provisioned plan fails at
+    plan-build time, not inside jit.  Capacity knobs are the caller's:
     a stage after an intra merge must provision for the *merged* density
-    (``costmodel.merged_profile``), not the per-worker one."""
+    (``costmodel.merged_profile``), not the per-worker one — see
+    :func:`plan_stage_args` for the one place that computes them."""
+    spec = sreg.get_scheme(scheme)
+    if stage_args is None:
+        try:
+            stage_args = StageArgs(**kw)
+        except TypeError:
+            valid = ", ".join(f.name for f in dataclasses.fields(StageArgs))
+            bad = ", ".join(sorted(set(kw) - {
+                f.name for f in dataclasses.fields(StageArgs)}))
+            raise ValueError(
+                f"stage_sync({scheme!r}): unknown stage arg(s) {bad}; "
+                f"StageArgs fields are: {valid}") from None
+    elif kw:
+        raise ValueError(
+            "stage_sync: pass a typed stage_args OR loose keyword "
+            f"arguments, not both (got stage_args and {sorted(kw)})")
+    sreg.validate_stage_args(spec, stage_args,
+                             where=f"stage over axis {axis!r}")
+    kwargs = sreg.stage_kwargs(spec, stage_args)
+    if spec.needs_n:
+        kwargs["n"] = n
+    return spec.resolve_sync()(dense, axis=axis, **kwargs)
+
+
+def level_budget(topology, budget: float, level: int) -> float:
+    """Capacity budget for a plan stage at ``level``: stages after the
+    intra merge provision for the worst-case merged density (the
+    product of earlier level sizes' non-overlapping nonzeros in one
+    tensor) — the capacity-growth boundary semantics of DESIGN.md §10.
+    Level 0 passes the configured budget through untouched (the flat
+    path must stay byte-identical to the pre-topology stack)."""
+    if level == 0:
+        return budget
+    grow = math.prod(lv.size for lv in topology.levels[:level])
+    return min(1.0, budget * grow)
+
+
+def stage_args_for(
+    scheme: str, *, rows: int, budget: float,
+    layout: ZenLayout | None = None, use_hash_bitmap: bool = True,
+    backend: str = "xla", interpret: bool | None = None,
+    fused: bool | None = None,
+) -> StageArgs:
+    """Provision one stage's :class:`StageArgs` from a density budget —
+    the single place capacity sizing lives (GradSync, ``simulate_hier``
+    harnesses, and benchmarks all route through here instead of
+    hand-picking per-scheme kwargs).  ``cap = max(64, rows * budget)``
+    with the omnireduce block split preserved bit-for-bit from the
+    pre-registry provisioning."""
+    cap = max(64, int(rows * budget))
     if scheme == "dense":
-        return dense_sync(dense, axis=axis)
+        return StageArgs()
     if scheme == "zen":
-        if layout is None:
-            raise ValueError("stage_sync: scheme='zen' needs a layout")
-        return zen_sync(dense, axis=axis, layout=layout,
-                        use_hash_bitmap=use_hash_bitmap,
-                        backend=backend, interpret=interpret, fused=fused)
-    if scheme == "agsparse":
-        return agsparse_sync(dense, axis=axis, capacity=capacity)
-    if scheme == "sparcml":
-        return sparcml_sync(dense, axis=axis, n=n, capacity=capacity)
-    if scheme == "sparse_ps":
-        return sparse_ps_sync(dense, axis=axis, n=n,
-                              cap_push=cap_push or capacity,
-                              cap_pull=cap_pull or capacity)
+        return StageArgs(layout=layout, use_hash_bitmap=use_hash_bitmap,
+                         backend=backend, interpret=interpret, fused=fused)
     if scheme == "omnireduce":
-        return omnireduce_sync(dense, axis=axis, n=n, block=block,
-                               cap_push=cap_push or capacity,
-                               cap_pull=cap_pull or capacity)
-    raise ValueError(f"unknown scheme {scheme!r}")
+        blk = 8
+        nb = max(8, cap // blk)
+        return StageArgs(block=blk, cap_push=nb, cap_pull=nb)
+    # COO-capacity family: agsparse, sparcml, sparse_ps, balanced — the
+    # registry's arg aliases fan ``capacity`` into cap_push/cap_pull.
+    return StageArgs(capacity=cap)
+
+
+def plan_stage_args(
+    plan, topology, rows: int, *, density_budget: float, key: int = 0,
+    k: int = 3, r1_factor: float = 2.0, r2_ratio: float = 0.1,
+    backend: str = "xla", use_hash_bitmap: bool = True,
+    fused: bool | None = None, interpret: bool | None = None,
+) -> dict[int, StageArgs]:
+    """Provision every stage of a CommPlan: {level -> StageArgs}, with
+    size-1 levels skipped (free identity — ``hier_sync`` never
+    dispatches them) and capacity grown across the intra-merge boundary
+    via :func:`level_budget`.  Zen stages get a fresh layout sized for
+    the level's *merged* budget.  Each stage is validated against the
+    registry so a bad plan fails here, with the level named, not inside
+    the jit trace."""
+    out: dict[int, StageArgs] = {}
+    for stage in plan.stages:
+        lvl = topology.levels[stage.level]
+        if lvl.size <= 1:
+            continue
+        b = level_budget(topology, density_budget, stage.level)
+        layout = None
+        if stage.scheme == "zen":
+            layout = make_zen_layout(rows, lvl.size, density_budget=b,
+                                     key=key, k=k, r1_factor=r1_factor,
+                                     r2_ratio=r2_ratio)
+        args = stage_args_for(
+            stage.scheme, rows=rows, budget=b, layout=layout,
+            use_hash_bitmap=use_hash_bitmap, backend=backend,
+            interpret=interpret, fused=fused)
+        sreg.validate_stage_args(
+            sreg.get_scheme(stage.scheme), args,
+            where=f"plan stage {stage.scheme}@level{stage.level}")
+        out[stage.level] = args
+    return out
 
 
 def hier_sync(
@@ -600,9 +788,10 @@ def hier_sync(
     fast (intra) axis, stage 1 runs on the *intra-aggregated* gradient
     over the slow (inter) axis.  Exact by associativity of the sum.
 
-    ``stage_kw`` maps level index -> extra kwargs for that stage's
-    ``stage_sync`` call (capacity, layout, backend, ...).  Size-1 levels
-    are skipped (free identity) and report zero wire words.  Returns the
+    ``stage_kw`` maps level index -> that stage's arguments, as either a
+    typed :class:`StageArgs` (what :func:`plan_stage_args` builds) or a
+    loose kwargs dict.  Size-1 levels are skipped (free identity) and
+    report zero wire words.  Returns the
     SUM over all ``topology.n`` workers (same convention as every flat
     ``*_sync``) with ``SyncStats.by_level`` carrying the per-level wire
     split the inter-volume regression gate tracks."""
@@ -616,8 +805,13 @@ def hier_sync(
         if lvl.size <= 1:
             by_level.append(jnp.float32(0))
             continue
-        g, st = stage_sync(stage.scheme, g, axis=lvl.axis, n=lvl.size,
-                           **stage_kw.get(stage.level, {}))
+        kw = stage_kw.get(stage.level, {})
+        if isinstance(kw, StageArgs):
+            g, st = stage_sync(stage.scheme, g, axis=lvl.axis,
+                               n=lvl.size, stage_args=kw)
+        else:
+            g, st = stage_sync(stage.scheme, g, axis=lvl.axis,
+                               n=lvl.size, **kw)
         sent = sent + st.sent_words
         overflow = overflow + st.overflow
         by_level.append(st.sent_words)

@@ -242,12 +242,29 @@ def hier_plan(intra_scheme: str, inter_scheme: str) -> CommPlan:
     return CommPlan((Stage(intra_scheme, 0), Stage(inter_scheme, 1)))
 
 
+def _check_scheme(scheme: str, tag: str) -> None:
+    """Reject plan tags naming unregistered or analytic-only schemes at
+    parse time (the registry lists the valid names in the error), so a
+    typo'd ``--sync`` or bucket tag fails before any tracing."""
+    from repro.core import registry as _registry  # deferred: no cycle at import
+
+    spec = _registry.get_scheme(scheme)  # unknown -> ValueError w/ names
+    if not spec.executable:
+        raise ValueError(
+            f"plan tag {tag!r}: scheme {scheme!r} is analytic-only (a "
+            f"cost-model curve, not an executable collective); "
+            f"executable schemes: "
+            f"{', '.join(_registry.registered_schemes(executable_only=True))}")
+
+
 def parse_plan(tag: str) -> CommPlan:
-    """Inverse of ``CommPlan.tag()``."""
+    """Inverse of ``CommPlan.tag()``.  Scheme tokens are validated
+    against the scheme registry (``repro.core.registry``)."""
     tag = tag.strip()
     if not tag.startswith("hier("):
         if "@" in tag or "(" in tag:
             raise ValueError(f"malformed plan tag {tag!r}")
+        _check_scheme(tag, tag)
         return flat_plan(tag)
     if not tag.endswith(")"):
         raise ValueError(f"malformed plan tag {tag!r}")
@@ -263,6 +280,7 @@ def parse_plan(tag: str) -> CommPlan:
             raise ValueError(
                 f"malformed plan tag {tag!r}: stage {i} must be "
                 f"'<scheme>@{_ROLES[i]}', got {part.strip()!r}")
+        _check_scheme(scheme, tag)
         stages.append(Stage(scheme, i))
     return CommPlan(tuple(stages))
 

@@ -32,7 +32,6 @@ profile) through ``costmodel.choose_scheme``.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any
 
 import jax
@@ -50,7 +49,7 @@ from repro.core.topology import CommPlan, Topology, resolve_plan
 class SyncConfig:
     """How gradients are synchronized across the data-parallel axis."""
 
-    scheme: str = "zen"           # zen | dense | agsparse | sparcml | sparse_ps | omnireduce | auto
+    scheme: str = "zen"           # any registry scheme (see registry.cli_scheme_choices()) | auto
     density_budget: float = 0.25  # capacity sizing for sparse buffers
     k: int = 3                    # Alg. 1 rehash rounds
     r1_factor: float = 2.0        # r1 = r1_factor * nnz_budget / n  (paper: 2)
@@ -225,17 +224,11 @@ class GradSync:
         return any(s in name for s in self.sparse_paths)
 
     def _level_budget(self, budget: float, level: int) -> float:
-        """Capacity budget for a stage at ``level``: stages after the
-        intra merge provision for the worst-case merged density
-        (``n_intra`` non-overlapping workers' non-zeros in one tensor) —
-        the capacity-growth boundary semantics of DESIGN.md §10.  The
-        overflow counters surface genuine violations as always (§2).
-        Level 0 passes the configured budget through untouched (the flat
-        path must stay byte-identical to the pre-topology stack)."""
-        if level == 0:
-            return budget
-        grow = math.prod(lv.size for lv in self.topology.levels[:level])
-        return min(1.0, budget * grow)
+        """Capacity budget for a stage at ``level`` — delegates to
+        ``schemes.level_budget`` (the one shared implementation of the
+        DESIGN.md §10 capacity-growth boundary; the simulate_hier test
+        harnesses and benchmarks use the same function)."""
+        return schemes.level_budget(self.topology, budget, level)
 
     def _compressed_budget(self) -> float:
         """Capacity budget for compressed buckets: 4x the configured
@@ -295,26 +288,23 @@ class GradSync:
 
     # -- per-bucket sync ------------------------------------------------------
 
-    def _stage_kwargs(self, bucket: bk.Bucket, scheme: str,
-                      level: int) -> dict:
-        """``schemes.stage_sync`` kwargs for one plan stage of one bucket:
-        capacities grow with the merged density after earlier levels."""
+    def _stage_args(self, bucket: bk.Bucket, scheme: str,
+                    level: int) -> schemes.StageArgs:
+        """Typed :class:`StageArgs` for one plan stage of one bucket:
+        capacities grow with the merged density after earlier levels.
+        Provisioning lives in ``schemes.stage_args_for`` — the single
+        shared implementation the test harnesses and benchmarks also
+        route through."""
         cfg = self.cfg
         capd = (self._compressed_budget() if bucket.compress != "none"
                 else cfg.density_budget)
         rows = (bucket.slots[0].shape[0] if bucket.kind == bk.SPARSE
                 else bucket.size)
-        cap = max(64, int(rows * self._level_budget(capd, level)))
-        kw = dict(
-            capacity=cap, layout=self._layouts.get((bucket.key, level)),
+        return schemes.stage_args_for(
+            scheme, rows=rows, budget=self._level_budget(capd, level),
+            layout=self._layouts.get((bucket.key, level)),
             use_hash_bitmap=cfg.use_hash_bitmap, backend=cfg.backend,
-            fused=cfg.fused_encode,
-        )
-        if scheme == "omnireduce":
-            blk = 8
-            nb = max(8, cap // blk)
-            kw.update(block=blk, cap_push=nb, cap_pull=nb)
-        return kw
+            fused=cfg.fused_encode)
 
     def _encode_bucket(self, bucket: bk.Bucket, payload: jnp.ndarray):
         """Local, collective-free stage (overlappable with the previous
@@ -353,9 +343,9 @@ class GradSync:
             out = lax.psum(g, lvl.axis)
             words = jnp.float32(2 * (lvl.size - 1) / lvl.size) * g.size
             return out, SyncStats(sent_words=words, overflow=jnp.int32(0))
-        kw = self._stage_kwargs(bucket, stage.scheme, level)
+        args = self._stage_args(bucket, stage.scheme, level)
         return schemes.stage_sync(stage.scheme, g, axis=lvl.axis,
-                                  n=lvl.size, **kw)
+                                  n=lvl.size, stage_args=args)
 
     def _intra_bucket(self, bucket: bk.Bucket, enc):
         """Hierarchical stage 0: aggregate over the fast (intra) axis.

@@ -18,6 +18,7 @@ import numpy as np   # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.configs import ALL_ARCHS, INPUT_SHAPES, get_config  # noqa: E402
+from repro.core.registry import cli_scheme_choices  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.train import steps as st  # noqa: E402
 from repro.train.build import (  # noqa: E402
@@ -133,7 +134,8 @@ def main():
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true",
                     help="all (arch x shape) combos")
-    ap.add_argument("--sync", default="zen")
+    ap.add_argument("--sync", default="zen",
+                    choices=cli_scheme_choices())
     ap.add_argument("--bucket-bytes", type=int, default=None,
                     help="fuse dense grads into buckets of at most this "
                          "many bytes and emit the double-buffered overlap "

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint.io import save
 from repro.configs import ALL_ARCHS, get_config
+from repro.core.registry import cli_scheme_choices
 from repro.core.sparsify import DensityController
 from repro.core.zen import SyncConfig
 from repro.data.pipeline import DataConfig, SyntheticLM
@@ -41,8 +42,7 @@ def main():
     ap.add_argument("--mesh", default="1x1",
                     help="DxM or PxDxM, e.g. 16x16 or 2x16x16")
     ap.add_argument("--sync", default="zen",
-                    choices=["zen", "dense", "agsparse", "sparcml",
-                             "sparse_ps", "omnireduce", "auto"])
+                    choices=cli_scheme_choices())
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--density-budget", type=float, default=0.25)
     ap.add_argument("--bucket-bytes", type=int, default=None,

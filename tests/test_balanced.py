@@ -1,0 +1,239 @@
+"""Balanced (Ok-Topk-family) sparse allreduce + the scheme registry.
+
+Three contracts under test:
+
+1. ``balanced_sync`` correctness and the *balanced bound*: buffers sized
+   at ``nnz_global/n + one-bin slack`` never overflow no matter how
+   skewed the per-worker nonzeros are (the property agsparse/sparse_ps
+   lack — their correct provisioning grows with ``n * nnz_max``).  The
+   hypothesis sweep drives the skew fraction from uniform to one worker
+   holding 100% of nonzeros.
+
+2. The planner: ``choose_plan`` picks balanced over zen / agsparse /
+   sparcml / dense on a profile whose aggregated density sits below
+   zen's bitmap break-even (d(n) < 1/32 - 2*bins/M), flat and as a hier
+   stage, and stays argmin-consistent with ``plan_times``.
+
+3. The registry API: config-named StageArgs validation errors, unknown
+   schemes listing the registered names, analytic-only schemes rejected
+   in plan tags, CLI choices derived (not hardcoded), and registry
+   coverage (every scheme has volume + rounds + a tier-1 parity test).
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core import costmodel as cm
+from repro.core import registry as rg
+from repro.core import schemes
+from repro.core import topology as tp
+from repro.core.registry import StageArgs
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+
+N, M = 4, 4096
+T = 512                       # total nonzeros across all workers
+BINW = M // rg.BALANCED_BINS  # bin width at the default resolution
+
+# balanced bound: a destination's contiguous range holds at most
+# total/n + (count of one boundary bin) multiset entries; one bin holds
+# at most min(T, n * bin_width) entries (duplicates across workers)
+CAP = T // N + min(T, N * BINW)
+
+
+def _skewed_workers(frac: float, seed: int) -> np.ndarray:
+    """[N, M] f32 with exactly T nonzeros total; ``frac`` of them on
+    worker 0, the rest spread over the other workers."""
+    rng = np.random.default_rng(seed)
+    g = np.zeros((N, M), np.float32)
+    hot = int(frac * T)
+    counts = [hot] + [0] * (N - 1)
+    for j, _ in enumerate(range(T - hot)):
+        counts[1 + j % (N - 1)] += 1
+    for i, c in enumerate(counts):
+        pos = rng.choice(M, size=c, replace=False)
+        g[i, pos] = rng.standard_normal(c).astype(np.float32)
+    return g
+
+
+def _run_balanced(g: np.ndarray):
+    return schemes.simulate(schemes.balanced_sync, jnp.asarray(g),
+                            n=N, cap_push=CAP, cap_pull=CAP)
+
+
+# ---------------------------------------------------------------------------
+# 1. correctness + the balanced bound
+# ---------------------------------------------------------------------------
+
+def test_balanced_matches_dense_oracle_uniform():
+    g = _skewed_workers(0.25, seed=0)
+    out, stats = _run_balanced(g)
+    assert int(np.asarray(stats.overflow).sum()) == 0
+    np.testing.assert_allclose(np.asarray(out),
+                               g.sum(0)[None].repeat(N, 0), atol=1e-4)
+
+
+def test_balanced_full_skew_zero_overflow_with_bound_sized_buffers():
+    """One worker holds 100% of the nonzeros: T entries rebalance to
+    ~T/N per destination, so buffers sized by the balanced bound (CAP,
+    independent of nnz_max) do not overflow — the exact regime where
+    agsparse needs capacity == nnz_max == T."""
+    g = _skewed_workers(1.0, seed=1)
+    out, stats = _run_balanced(g)
+    assert int(np.asarray(stats.overflow).sum()) == 0
+    np.testing.assert_allclose(np.asarray(out),
+                               g.sum(0)[None].repeat(N, 0), atol=1e-4)
+
+
+def test_balanced_beats_agsparse_wire_under_full_skew():
+    """At 100% skew agsparse must provision capacity = nnz_max = T and
+    its bottleneck worker ships (n-1) * T COO pairs; balanced ships the
+    rebalanced ~T/n-per-destination volume and wins on the wire."""
+    g = _skewed_workers(1.0, seed=2)
+    _, st_b = _run_balanced(g)
+    _, st_a = schemes.simulate(schemes.agsparse_sync, jnp.asarray(g),
+                               capacity=T)
+    bal = float(np.asarray(st_b.sent_words).max())
+    ags = float(np.asarray(st_a.sent_words).max())
+    assert bal < ags, (bal, ags)
+
+
+@settings(max_examples=12, deadline=None)
+@given(frac=st.floats(min_value=0.0, max_value=1.0), seed=st.integers(0, 63))
+def test_balanced_bound_holds_across_skew_sweep(frac, seed):
+    """Property: for ANY skew (uniform .. one-worker-holds-all), the
+    bound-sized buffers (CAP = T/n + one-bin slack — no nnz_max term)
+    absorb the exchange with zero overflow and exact aggregation."""
+    g = _skewed_workers(frac, seed)
+    out, stats = _run_balanced(g)
+    assert int(np.asarray(stats.overflow).sum()) == 0
+    np.testing.assert_allclose(np.asarray(out),
+                               g.sum(0)[None].repeat(N, 0), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# 2. planner integration
+# ---------------------------------------------------------------------------
+
+def _skewed_profile(m: int = 1 << 16, d: float = 0.005) -> cm.SparsityProfile:
+    """The MoE-router regime: all workers hit the SAME hot region
+    (full overlap: d(i) = d for all i) with per-range skew 8.  Full
+    overlap is where agsparse's (n-1)·d·M centralization and sparcml's
+    per-stage re-exchange waste the most, and d(n)·M sits below zen's
+    M/32 bitmap-pull break-even — balanced's rebalanced COO undercuts
+    every incumbent candidate at n = 8."""
+    return cm.SparsityProfile(M=m, d=lambda i: d, s=lambda n: 8.0)
+
+
+def test_choose_plan_picks_balanced_flat():
+    p = _skewed_profile()
+    plan = cm.choose_plan(p, tp.flat_topology(8))
+    assert plan.tag() == "balanced"
+
+
+def test_choose_plan_picks_balanced_hier_stage():
+    """On a two-level topology (beta-dominated links: the fat-gradient
+    regime where word volume, not latency, decides), balanced must win
+    the 8-wide inter level; argmin-consistency with the published
+    per-plan times guards against candidate-set drift."""
+    p = _skewed_profile()
+    topo = tp.two_level_topology(2, 8, alpha_intra=0.0, beta_intra=1.0,
+                                 alpha_inter=0.0, beta_inter=1.0)
+    plan = cm.choose_plan(p, topo)
+    assert "balanced" in [s.scheme for s in plan.stages], plan.tag()
+    times = cm.plan_times(p, topo)
+    times.pop("lower_bound")
+    assert plan.tag() == min(times, key=times.get)
+
+
+def test_balanced_volume_has_no_skew_penalty():
+    """The point of the rebalance: sparse_ps pays s(n); balanced does
+    not.  With a skew-10 profile the balanced volume is unchanged while
+    sparse_ps scales by the skew factor."""
+    base = cm.SparsityProfile(M=1 << 16, d=lambda i: min(1.0, i * 0.001),
+                              s=lambda n: 1.0)
+    skew = cm.SparsityProfile(M=1 << 16, d=lambda i: min(1.0, i * 0.001),
+                              s=lambda n: 10.0)
+    assert cm.balanced(skew, 8) == cm.balanced(base, 8)
+    assert cm.sparse_ps(skew, 8) == pytest.approx(10 * cm.sparse_ps(base, 8))
+
+
+def test_balanced_floored_by_optimal_curve():
+    p = _skewed_profile()
+    for n in (2, 4, 8, 16):
+        assert cm.balanced(p, n) >= cm.balanced_parallelism(p, n)
+
+
+# ---------------------------------------------------------------------------
+# 3. registry API
+# ---------------------------------------------------------------------------
+
+def test_unknown_scheme_error_lists_registered_names():
+    with pytest.raises(ValueError, match="registered schemes are"):
+        schemes.stage_sync("bogus", jnp.zeros((8,)), axis="x", n=2)
+    with pytest.raises(ValueError, match="balanced"):
+        rg.get_scheme("not-a-scheme")
+
+
+def test_stray_stage_arg_rejected_with_config_named_error():
+    with pytest.raises(ValueError, match="does not consume stage arg"):
+        schemes.stage_sync("agsparse", jnp.zeros((8,)), axis="x", n=2,
+                           capacity=4, block=2)
+
+
+def test_missing_required_stage_arg_rejected():
+    with pytest.raises(ValueError, match="requires stage arg"):
+        schemes.stage_sync("balanced", jnp.zeros((8,)), axis="x", n=2)
+    with pytest.raises(ValueError, match="layout"):
+        schemes.stage_sync("zen", jnp.zeros((8,)), axis="x", n=2)
+
+
+def test_stage_args_and_loose_kwargs_are_exclusive():
+    with pytest.raises(ValueError, match="not both"):
+        schemes.stage_sync("agsparse", jnp.zeros((8,)), axis="x", n=2,
+                           stage_args=StageArgs(capacity=4), capacity=4)
+
+
+def test_plan_tags_reject_analytic_only_schemes():
+    for tag in ("lower_bound", "balanced_parallelism",
+                "hier(balanced_parallelism@intra,dense@inter)"):
+        with pytest.raises(ValueError, match="analytic-only"):
+            tp.parse_plan(tag)
+
+
+def test_capacity_alias_fans_into_push_pull():
+    spec = rg.get_scheme("balanced")
+    kw = rg.stage_kwargs(spec, StageArgs(capacity=128))
+    assert kw == {"cap_push": 128, "cap_pull": 128}
+    kw = rg.stage_kwargs(spec, StageArgs(capacity=128, cap_pull=512))
+    assert kw == {"cap_push": 128, "cap_pull": 512}
+
+
+def test_cli_choices_derive_from_registry():
+    choices = rg.cli_scheme_choices()
+    assert "balanced" in choices and "auto" in choices
+    # every executable scheme is offered; analytic-only curves are not
+    assert "lower_bound" not in choices
+    assert set(rg.registered_schemes(executable_only=True)) <= set(choices)
+
+
+def test_plan_candidates_dense_first_balanced_last():
+    cands = rg.plan_candidates()
+    assert cands[0] == "dense"          # argmin ties resolve toward dense
+    assert cands[-1] == "balanced"      # newcomer cannot steal exact ties
+    assert "sparse_ps" not in cands and "omnireduce" not in cands
+
+
+def test_registry_coverage_is_clean():
+    assert rg.coverage_errors(TESTS_DIR) == []
+
+
+def test_plan_stage_args_skips_size_one_levels():
+    topo = tp.build_topology(8, 8)      # inter level has size 1
+    plan = tp.resolve_plan("balanced", topo)
+    kw = schemes.plan_stage_args(plan, topo, M, density_budget=0.25)
+    assert 0 in kw and 1 not in kw
+    assert kw[0].capacity == max(64, int(M * 0.25))

@@ -70,18 +70,10 @@ def test_hier_plans_match_oracle(plan_tag, node_size):
     oracle = vals.sum(0)
     topo = tp.build_topology(N, node_size)
     plan = tp.parse_plan(plan_tag)
-    cap = M // 2
-    stage_kw = {}
-    for stage in plan.stages:
-        lvl = topo.levels[stage.level]
-        kw = {}
-        if stage.scheme == "zen":
-            budget = 0.3 if stage.level == 0 else min(1.0, 0.3 * node_size)
-            kw["layout"] = schemes.make_zen_layout(
-                M, lvl.size, density_budget=budget)
-        elif stage.scheme in ("agsparse", "sparcml"):
-            kw["capacity"] = cap
-        stage_kw[stage.level] = kw
+    # provisioning routed through the shared StageArgs builder — capacity
+    # growth across the intra merge and zen layout sizing live in ONE
+    # place (schemes.plan_stage_args), not re-derived per test harness
+    stage_kw = schemes.plan_stage_args(plan, topo, M, density_budget=0.3)
     out, st = _hier(vals, plan, topo, stage_kw)
     assert int(np.asarray(st.overflow).sum()) == 0
     np.testing.assert_allclose(np.asarray(out),

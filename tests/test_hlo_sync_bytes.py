@@ -12,7 +12,13 @@ words*4 against ``launch/hlo_cost.py``'s trip-weighted collective bytes:
   * agsparse: two all_gathers (i32 idx + f32 val) -> (g-1) * 8C bytes.
     The claim counts actual non-zeros while XLA moves full capacity, so
     the payload here saturates capacity exactly (nnz == C) and the
-    comparison is exact — any static-shape or factor drift fails.
+    comparison is exact — any static-shape or factor drift fails;
+  * balanced: the stride-16 payload makes every histogram bin hold
+    exactly one entry per worker, so the rebalanced ranges give every
+    worker C/8 entries per destination (cap_push saturated), C distinct
+    indices per reduced shard (cap_pull saturated), and the three
+    collectives (histogram all-reduce, COO all-to-all, shard
+    all-gather) are each byte-exact against the claim.
 """
 import os
 import subprocess
@@ -75,6 +81,16 @@ WORKER = textwrap.dedent("""
     assert abs(c - m) < 1e-6 * max(c, 1), (
         "agsparse: SyncStats %.1fB vs XLA %.1fB (%s)" % (c, m, w))
     print("AGSPARSE_BYTES", c, m)
+
+    # balanced: cap_push = C/8 per-destination slots (the stride-16
+    # payload rebalances to exactly C/8 entries per (worker, dest)),
+    # cap_pull = C distinct indices per reduced range — both saturated,
+    # so claim == wire exactly across all three collectives
+    c, m, w = measure(schemes.balanced_sync, n=N, cap_push=C // 8,
+                      cap_pull=C)
+    assert abs(c - m) < 1e-6 * max(c, 1), (
+        "balanced: SyncStats %.1fB vs XLA %.1fB (%s)" % (c, m, w))
+    print("BALANCED_BYTES", c, m)
     print("ALL_OK")
 """)
 
