@@ -7,7 +7,7 @@ PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 # formatter and reflowing it would bury real diffs)
 FORMATTED := src/repro/train/schedule.py benchmarks/check_regression.py
 
-.PHONY: test test-crossmesh test-hier lint check-bytecode check-registry bench-smoke bench-gate ci
+.PHONY: test test-crossmesh test-hier lint check-bytecode check-registry check-ast check-hlo bench-smoke bench-gate ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -55,9 +55,23 @@ lint:
 # registry coverage (DESIGN.md §12): every registered scheme must carry
 # a volume and a rounds function that evaluate sanely, and every
 # executable scheme must appear in a tier-1 test — a scheme cannot be
-# added without a parity test riding along
+# added without a parity test riding along.  Folded into the zenlint
+# driver (DESIGN.md §13) so all three static gates share one entry point.
 check-registry:
-	$(PY) -m repro.core.registry --check-tests tests
+	$(PY) -m repro.analysis.lint --registry-only
+
+# zenlint AST layer (DESIGN.md §13): no raw collectives outside
+# schemes.py/kernels/, no scheme-name dispatch chains, no hardcoded CLI
+# scheme choices
+check-ast:
+	$(PY) -m repro.analysis.lint --ast-only
+
+# zenlint HLO sweep (DESIGN.md §13): lower every executable scheme
+# (flat + hier, n in {2,8}) plus the run_schedule pipeline on the host
+# mesh and certify the R1-R5 paper invariants (sort-free, wire-exact,
+# no f64, fences intact, no dynamic fallbacks)
+check-hlo:
+	$(PY) -m repro.analysis.lint --hlo-only
 
 # fast benchmark smoke: Table 1 + Fig. 7 analytics + the zen_sync
 # micro-benchmark that refreshes BENCH_sync.json
@@ -80,4 +94,4 @@ bench-baseline:
 	$(PY) -m benchmarks.micro_sync --smoke --json BENCH_smoke.json
 	$(PY) -m benchmarks.merge_baseline BENCH_sync.json BENCH_smoke.json
 
-ci: lint check-bytecode check-registry test bench-smoke
+ci: lint check-bytecode check-ast check-registry test check-hlo bench-smoke

@@ -1,0 +1,15 @@
+"""zenlint: static analysis over lowered sync programs (DESIGN.md §13).
+
+Two layers:
+
+  * ``hlo_ir`` + ``rules`` — a parsed-module IR over optimized HLO text and
+    a rule catalog (R1..R5) certifying the paper's claims as properties of
+    the *lowered* program: sort-free encode, wire-exact collective bytes,
+    no silent promotion, overlap fences intact, no dynamic fallbacks.
+  * ``ast_rules`` — source-tree lint enforcing the scheme-registry contract
+    (no raw sync collectives, no scheme-name literals, no dispatch chains
+    outside the registry surfaces).
+
+Driver: ``python -m repro.analysis.lint`` sweeps every registered scheme x
+{flat, hier} x {n=2, 8} on the host-platform mesh.
+"""

@@ -1,0 +1,173 @@
+"""zenlint layer 2: AST lint enforcing the scheme-registry contract.
+
+PR 8 collapsed five hand-maintained scheme surfaces into
+``core/registry.py``; these rules keep the tree collapsed:
+
+  AST1  no raw sync collectives (``lax.psum`` / ``all_gather`` /
+        ``all_to_all`` / ``ppermute`` / ...) outside ``core/schemes.py``
+        and ``kernels/`` — every wire op must flow through
+        ``stage_sync`` so SyncStats, the cost model, and zenlint's R2
+        wire contract see it.  Collectives over *mesh-structure* axes
+        (tensor parallel ``tp_axis``, ZeRO ``zaxes``, pod mean
+        ``pod_axis``) are a different subsystem and exempt — matched on
+        the axis argument's source text.
+  AST2  no scheme-name string comparisons (``if scheme == "zen"``,
+        ``scheme in ("dense", ...)``) outside the registry surfaces —
+        dispatch chains must not regrow.
+  AST3  no hardcoded CLI ``choices=[...]`` containing scheme names —
+        derive from ``registry.cli_scheme_choices()``.
+
+A line can waive a finding with a ``# zenlint: ignore[ASTn]`` comment —
+grep-able, reviewed, never silent.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import List, Optional
+
+from repro.analysis.rules import Finding
+
+SYNC_COLLECTIVES = {
+    "psum", "pmean", "pmax", "pmin", "psum_scatter", "all_gather",
+    "all_gather_invariant", "all_to_all", "ppermute",
+}
+
+# files allowed to call sync collectives directly (repo-relative)
+COLLECTIVE_ALLOWED = ("src/repro/core/schemes.py", "src/repro/kernels/")
+
+# files allowed to compare scheme-name literals: the registry itself and
+# the core surfaces whose *registration/bucketing* semantics are keyed by
+# name (each guarded by tier-1 tests; everything else must dispatch
+# through SchemeSpec)
+LITERAL_ALLOWED = (
+    "src/repro/core/registry.py",
+    "src/repro/core/costmodel.py",
+    "src/repro/core/schemes.py",
+    "src/repro/core/zen.py",
+    "src/repro/core/buckets.py",
+)
+
+# axis expressions naming a non-sync mesh subsystem (TP / ZeRO / pod)
+_EXEMPT_AXIS = re.compile(r"tp_axis|zaxes|pod_axis")
+_WAIVER = re.compile(r"#\s*zenlint:\s*ignore\[(AST\d)\]")
+
+
+def _scheme_names() -> frozenset:
+    from repro.core import registry  # deferred: keeps import light
+    return frozenset(registry.registered_schemes())
+
+
+def _call_collective(node: ast.Call) -> Optional[str]:
+    """The sync-collective name a call invokes, if any."""
+    f = node.func
+    if isinstance(f, ast.Attribute) and f.attr in SYNC_COLLECTIVES:
+        base = f.value
+        if (isinstance(base, ast.Name) and base.id == "lax") or \
+                (isinstance(base, ast.Attribute) and base.attr == "lax"):
+            return f.attr
+    if isinstance(f, ast.Name) and f.id in SYNC_COLLECTIVES:
+        return f.id
+    return None
+
+
+def _axis_expr_src(node: ast.Call) -> str:
+    """Source text of the call's axis argument (2nd positional or the
+    axis/axis_name keyword) — used for the TP/ZeRO/pod exemption."""
+    cand = []
+    if len(node.args) > 1:
+        cand.append(node.args[1])
+    for kw in node.keywords:
+        if kw.arg in ("axis", "axis_name"):
+            cand.append(kw.value)
+    return " ".join(ast.unparse(c) for c in cand)
+
+
+def _waived(lines: List[str], lineno: int, rid: str) -> bool:
+    line = lines[lineno - 1] if 0 < lineno <= len(lines) else ""
+    m = _WAIVER.search(line)
+    return bool(m and m.group(1) == rid)
+
+
+def _const_scheme_strs(node: ast.AST, names: frozenset) -> List[str]:
+    """Scheme-name string constants inside a literal (str or container)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value] if node.value in names else []
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out = []
+        for elt in node.elts:
+            out.extend(_const_scheme_strs(elt, names))
+        return out
+    return []
+
+
+def check_source(src: str, relpath: str) -> List[Finding]:
+    """Run AST1-AST3 on one file's source; relpath decides allowlists."""
+    names = _scheme_names()
+    findings: List[Finding] = []
+    lines = src.splitlines()
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding("AST1", f"unparsable: {e}", case=relpath)]
+    coll_ok = relpath.startswith(COLLECTIVE_ALLOWED)
+    lit_ok = relpath.startswith(LITERAL_ALLOWED)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            cname = _call_collective(node)
+            if cname and not coll_ok \
+                    and not _EXEMPT_AXIS.search(_axis_expr_src(node)) \
+                    and not _waived(lines, node.lineno, "AST1"):
+                findings.append(Finding(
+                    "AST1",
+                    f"raw sync collective lax.{cname}() — route it "
+                    f"through schemes.stage_sync so SyncStats and the "
+                    f"wire contract (R2) see it",
+                    case=f"{relpath}:{node.lineno}"))
+            for kw in node.keywords:
+                if kw.arg == "choices":
+                    hits = _const_scheme_strs(kw.value, names)
+                    if hits and not _waived(lines, node.lineno, "AST3"):
+                        findings.append(Finding(
+                            "AST3",
+                            f"hardcoded CLI choices with scheme name(s) "
+                            f"{sorted(set(hits))} — derive from "
+                            f"registry.cli_scheme_choices()",
+                            case=f"{relpath}:{node.lineno}"))
+        elif isinstance(node, ast.Compare) and not lit_ok:
+            sides = [node.left, *node.comparators]
+            hits, other_src = [], []
+            for s in sides:
+                got = _const_scheme_strs(s, names)
+                hits.extend(got)
+                if not got:
+                    other_src.append(ast.unparse(s))
+            # "dense" doubles as an architecture kind (models/): the bare
+            # word only counts when the compared expression looks
+            # scheme-ish; distinctive names (zen, agsparse, ...) always do
+            if set(hits) <= {"dense"} and not re.search(
+                    r"scheme|sync|plan", " ".join(other_src)):
+                hits = []
+            if hits and not _waived(lines, node.lineno, "AST2"):
+                findings.append(Finding(
+                    "AST2",
+                    f"scheme-name literal comparison against "
+                    f"{sorted(set(hits))} — dispatch through the "
+                    f"registry (SchemeSpec), not string chains",
+                    case=f"{relpath}:{node.lineno}"))
+    return findings
+
+
+def run_tree(root: str = "src/repro") -> List[Finding]:
+    """Lint every python file under ``root`` (repo-relative paths)."""
+    findings: List[Finding] = []
+    for dirpath, _dirs, files in os.walk(root):
+        for fn in sorted(files):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            rel = path.replace(os.sep, "/")
+            with open(path) as f:
+                findings.extend(check_source(f.read(), rel))
+    return findings

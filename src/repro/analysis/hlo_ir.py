@@ -1,0 +1,382 @@
+"""Parsed-module IR over optimized HLO text.
+
+Generalizes the ad-hoc regex walker that used to live in
+``launch/hlo_cost.py`` into a small reusable IR: computations, ops with
+lazily-parsed attributes (shape leaves, trip counts, replica groups, called
+subcomputations, collective classification), and trip-weighted folds over
+the call graph.  ``launch/hlo_cost.py`` (FLOPs/bytes roofline) and
+``analysis/rules`` (the zenlint R1..R5 catalog) both build on it.
+
+Two parsing fixes over the old walker, pinned by ``tests/test_zenlint.py``:
+
+  * tuple-shaped op results (including nested tuples, e.g. async pairs'
+    ``((f32[8]), f32[8], u32[])``) are split with balanced-paren scanning
+    instead of a ``\\([^)]*\\)`` regex that silently skipped them;
+  * async collective pairs (``all-reduce-start``/``-done``,
+    ``collective-permute-start``/``-done``) are classified by role so wire
+    bytes are counted exactly once — at the ``-start`` (whose result tuple
+    carries an (operands..., results...) layout; the data leaves are the
+    second half once scalar context words are dropped), never at ``-done``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import cached_property
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+# per-device wire volume as a multiple of the op's data bytes, given the
+# replica-group size g (ring algorithms; see DESIGN.md §13 / hlo_cost)
+WIRE_FACTOR: Dict[str, Callable[[int], float]] = {
+    "all-reduce": lambda g: 2 * (g - 1) / g,
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: float(g - 1),
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+COLLECTIVE_KINDS = tuple(WIRE_FACTOR)
+
+SHAPE_RE = re.compile(r"([a-z]\d*[a-z]*\d*)\[([0-9,]*)\]")
+COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_LHS_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_ARRAY_SHAPE_RE = re.compile(
+    r"^[a-z]\d*[a-z]*\d*\[[0-9,]*\](?:{[^}]*})?|^token\[\]")
+_KIND_RE = re.compile(r"^\s*([\w\-]+)\((.*)$")
+TRIP_RE = re.compile(r'"known_trip_count":{"n":"(\d+)"}')
+CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+BRANCHES_RE = re.compile(r"branch_computations={([^}]*)}")
+TF_RE = re.compile(r"(?:true|false)_computation=%?([\w.\-]+)")
+GROUPS_RE = re.compile(r"replica_groups={{([0-9,]*)}")
+GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeLeaf:
+    dtype: str
+    dims: Tuple[int, ...]
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def nbytes(self) -> int:
+        return self.elems * DTYPE_BYTES.get(self.dtype, 0)
+
+
+def parse_shape(spec: str) -> Tuple[ShapeLeaf, ...]:
+    """All array leaves of a (possibly nested tuple) shape spec, in order."""
+    leaves = []
+    for dt, dims in SHAPE_RE.findall(spec):
+        if dt not in DTYPE_BYTES:
+            continue
+        leaves.append(ShapeLeaf(dt, tuple(int(d) for d in dims.split(",")
+                                          if d)))
+    return tuple(leaves)
+
+
+def _take_shape(s: str) -> Optional[Tuple[str, str]]:
+    """Split ``s`` into (leading shape spec, remainder).
+
+    Handles array shapes (``f32[4,8]{1,0}``) and arbitrarily nested tuple
+    shapes via balanced-paren scanning — the old ``\\([^)]*\\)`` regex lost
+    every op whose result tuple itself contained a tuple.
+    """
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return s[:i + 1], s[i + 1:]
+        return None
+    m = _ARRAY_SHAPE_RE.match(s)
+    if m:
+        return m.group(0), s[m.end():]
+    return None
+
+
+def tuple_elements(spec: str) -> List[str]:
+    """Top-level elements of a tuple shape spec (or [spec] for arrays)."""
+    spec = spec.strip()
+    if not spec.startswith("("):
+        return [spec]
+    inner, depth, start, out = spec[1:-1], 0, 0, []
+    for i, ch in enumerate(inner):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(inner[start:i].strip())
+            start = i + 1
+    tail = inner[start:].strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
+def split_op_line(line: str) -> Optional[Tuple[str, str, str, str]]:
+    """Parse an HLO op line into (name, shape_spec, kind, rest)."""
+    m = _LHS_RE.match(line)
+    if not m:
+        return None
+    taken = _take_shape(line[m.end():])
+    if not taken:
+        return None
+    shape, tail = taken
+    km = _KIND_RE.match(tail)
+    if not km:
+        return None
+    return m.group(1), shape, km.group(1), km.group(2)
+
+
+@dataclasses.dataclass
+class HloOp:
+    name: str
+    shape: str     # result shape spec, verbatim
+    kind: str      # opcode, e.g. "all-reduce-start", "fusion", "while"
+    rest: str      # operands + attributes, verbatim
+
+    @cached_property
+    def leaves(self) -> Tuple[ShapeLeaf, ...]:
+        return parse_shape(self.shape)
+
+    @property
+    def result_elems(self) -> int:
+        return sum(lf.elems for lf in self.leaves)
+
+    @property
+    def result_bytes(self) -> int:
+        return sum(lf.nbytes for lf in self.leaves)
+
+    @cached_property
+    def trip_count(self) -> Optional[int]:
+        m = TRIP_RE.search(self.rest)
+        return int(m.group(1)) if m else None
+
+    @cached_property
+    def op_name(self) -> str:
+        m = OPNAME_RE.search(self.rest)
+        return m.group(1) if m else ""
+
+    @cached_property
+    def group_size(self) -> Optional[int]:
+        """Replica-group size, or None when the op carries no groups attr."""
+        m = GROUPS_RE.search(self.rest)
+        if m:
+            return max(1, m.group(1).count(",") + 1)
+        m = GROUPS_IOTA_RE.search(self.rest)
+        if m:  # iota form [G,S]<=[N]: G groups of S participants
+            return int(m.group(2))
+        return None
+
+    @cached_property
+    def collective(self) -> Optional[Tuple[str, str]]:
+        """(base kind, role) for collective ops; role in {sync,start,done}."""
+        for base in COLLECTIVE_KINDS:
+            if self.kind == base:
+                return base, "sync"
+            if self.kind == base + "-start":
+                return base, "start"
+            if self.kind == base + "-done":
+                return base, "done"
+        return None
+
+    @cached_property
+    def wire_data_bytes(self) -> int:
+        """Bytes of collective payload, counted once per start/done pair.
+
+        ``-done`` contributes 0.  A ``-start`` result tuple is laid out as
+        (operands..., results...[, context scalars]); after dropping scalar
+        integer context words, the data leaves are the second half (the
+        results) — taking all of them would double-charge the transfer.
+        """
+        if self.collective is None:
+            return 0
+        role = self.collective[1]
+        if role == "done":
+            return 0
+        if role == "sync":
+            return self.result_bytes
+        data = [lf for lf in self.leaves
+                if not (lf.dims == () and lf.dtype in ("u32", "s32", "u64",
+                                                       "s64", "pred"))]
+        if len(data) % 2 == 0 and data:
+            data = data[len(data) // 2:]
+        return sum(lf.nbytes for lf in data)
+
+    @cached_property
+    def called(self) -> Tuple[str, ...]:
+        """Subcomputations this op invokes (excluding reducer to_apply)."""
+        if self.kind == "while":
+            names = [m.group(1) for m in (BODY_RE.search(self.rest),
+                                          COND_RE.search(self.rest)) if m]
+            return tuple(names)
+        if self.kind == "conditional":
+            b = BRANCHES_RE.search(self.rest)
+            if b:
+                return tuple(x.strip().lstrip("%")
+                             for x in b.group(1).split(",") if x.strip())
+            return tuple(TF_RE.findall(self.rest))
+        m = CALLS_RE.search(self.rest) or BODY_RE.search(self.rest)
+        return (m.group(1),) if m else ()
+
+
+@dataclasses.dataclass
+class HloComputation:
+    name: str
+    ops: List[HloOp] = dataclasses.field(default_factory=list)
+    is_entry: bool = False
+
+
+@dataclasses.dataclass
+class HloModule:
+    computations: Dict[str, HloComputation]
+    entry_name: Optional[str]
+
+    @classmethod
+    def parse(cls, hlo_text: str) -> "HloModule":
+        comps: Dict[str, HloComputation] = {}
+        cur: Optional[HloComputation] = None
+        entry = None
+        for line in hlo_text.splitlines():
+            stripped = line.strip()
+            m = COMP_HDR.match(stripped) if "{" in line else None
+            if m and "->" in line:
+                cur = HloComputation(m.group(1),
+                                     is_entry=stripped.startswith("ENTRY"))
+                comps[cur.name] = cur
+                if cur.is_entry:
+                    entry = cur.name
+                continue
+            if cur is None:
+                continue
+            if stripped == "}":
+                cur = None
+                continue
+            parsed = split_op_line(line)
+            if parsed:
+                cur.ops.append(HloOp(*parsed))
+        return cls(computations=comps, entry_name=entry)
+
+    @property
+    def entry(self) -> HloComputation:
+        return self.computations.get(self.entry_name or "",
+                                     HloComputation("__missing__"))
+
+    def all_ops(self) -> Iterator[Tuple[str, HloOp]]:
+        """Every op in every computation (reachable or not) — for rules
+        that must hold module-wide (sorts, f64, unannotated whiles)."""
+        for comp in self.computations.values():
+            for op in comp.ops:
+                yield comp.name, op
+
+    def fold_entry(self, op_fn, *, all_branches: bool = False,
+                   merge=None) -> dict:
+        """Trip-weighted fold over the call graph from the entry.
+
+        ``op_fn(op, acc)`` mutates a per-computation dict accumulator;
+        while bodies/conds multiply by ``known_trip_count`` (1 when
+        absent), conditionals take the max-valued branch unless
+        ``all_branches``.  ``merge(dst, src, mult)`` folds a
+        subcomputation's dict into the parent's (default: numeric adds).
+        """
+        if merge is None:
+            def merge(dst, src, mult):
+                for k, v in src.items():
+                    dst[k] = dst.get(k, 0.0) + v * mult
+        memo: Dict[str, dict] = {}
+
+        def walk(name: str) -> dict:
+            if name in memo:
+                return memo[name]
+            memo[name] = {}  # cycle guard
+            acc: dict = {}
+            comp = self.computations.get(name)
+            for op in (comp.ops if comp else []):
+                op_fn(op, acc)
+                if not op.called:
+                    continue
+                if op.kind == "while":
+                    trip = op.trip_count or 1
+                    for sub in op.called:
+                        merge(acc, walk(sub), trip)
+                elif op.kind == "conditional" and not all_branches:
+                    subs = [walk(sub) for sub in op.called]
+                    if subs:
+                        best = max(subs,
+                                   key=lambda d: sum(v for v in d.values()
+                                                     if isinstance(v, (int,
+                                                                       float))))
+                        merge(acc, best, 1.0)
+                else:
+                    for sub in op.called:
+                        merge(acc, walk(sub), 1.0)
+            memo[name] = acc
+            return acc
+
+        return walk(self.entry_name or "")
+
+
+def collective_wire(module: HloModule) -> Dict[Tuple[str, int], float]:
+    """Trip-weighted per-device wire bytes keyed by (base kind, group size).
+
+    Start/done pairs count once; conditionals contribute all branches
+    (conservative for a verifier — a collective on any path is on the wire).
+    """
+    def op_fn(op: HloOp, acc: dict):
+        if op.collective is None:
+            return
+        base, _role = op.collective
+        b = op.wire_data_bytes
+        if not b:
+            return
+        g = op.group_size or 2
+        key = (base, g)
+        acc[key] = acc.get(key, 0.0) + WIRE_FACTOR[base](g) * b
+
+    return module.fold_entry(op_fn, all_branches=True)
+
+
+def count_collectives(module: HloModule, base: Optional[str] = None) -> int:
+    """Unweighted count of collective ops module-wide (pairs count once)."""
+    n = 0
+    for _comp, op in module.all_ops():
+        if op.collective is None or op.collective[1] == "done":
+            continue
+        if base is None or op.collective[0] == base:
+            n += 1
+    return n
+
+
+def find_sort_ops(text: str) -> List[str]:
+    """Sort ops in either StableHLO or optimized-HLO text.
+
+    One source of truth for the sort-free-encode claim (R1): callers hand
+    in whatever ``lower().as_text()`` or ``compile().as_text()`` produced.
+    """
+    hits = []
+    for i, line in enumerate(text.splitlines(), 1):
+        if re.search(r"\bstablehlo\.sort\b|\bmhlo\.sort\b", line):
+            hits.append(f"line {i}: {line.strip()[:100]}")
+    module = HloModule.parse(text)
+    for comp, op in module.all_ops():
+        if op.kind == "sort":
+            hits.append(f"{comp}: %{op.name} = sort(...)")
+    return hits

@@ -1,0 +1,327 @@
+"""zenlint rule catalog: paper invariants over lowered sync programs.
+
+Each rule takes a :class:`Subject` — one lowered program plus its
+expectations — and returns :class:`Finding`s.  The catalog (DESIGN.md §13):
+
+  R1  sort-free encode: no ``sort`` op (HLO) / ``stablehlo.sort`` reachable
+      from a sync program.  PR 1's segmented-cumsum claim, machine-checked.
+  R2  wire-exact: trip-weighted collective bytes per replica-group size
+      equal the registry's capacity-shaped expectation exactly, and the
+      program's own SyncStats claim matches (== for saturable schemes,
+      <= for over-provisioned ones like zen).
+  R3  no silent promotion: no f64 anywhere (no f32->f64 converts), and
+      reduction accumulators never narrower than their inputs.
+  R4  overlap fences present: the run_schedule pipeline keeps its
+      ``optimization_barrier``s in the lowering, and no fence input
+      depends on a collective (flat pipelines — encode(i+1) independent
+      of commit(i), the double-buffering contract).
+  R5  no dynamic fallbacks: no host callbacks / infeed / send-recv, and
+      every ``while`` carries ``known_trip_count``.
+
+Rules are registered with the :func:`rule` decorator; a scheme can waive a
+rule via ``SchemeSpec.lint_exempt`` (surfaced as ``Subject.exempt``), which
+the driver prints as an explicit waiver rather than silently skipping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.analysis import hlo_ir
+from repro.analysis.hlo_ir import DTYPE_BYTES, HloModule
+
+REL_TOL = 1e-6
+
+# jaxpr primitives that hit the wire (sync collectives under shard_map/vmap)
+COLLECTIVE_PRIMS = {
+    "psum", "pmax", "pmin", "pmean", "all_gather", "all_to_all", "ppermute",
+    "psum_scatter", "reduce_scatter", "all_gather_invariant",
+}
+
+_HOSTISH_KINDS = ("infeed", "outfeed", "send", "recv", "send-done",
+                  "recv-done")
+_HOSTISH_TARGET = re.compile(r"callback|host", re.IGNORECASE)
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    message: str
+    case: str = ""
+    computation: str = ""
+    op: str = ""
+
+    def __str__(self) -> str:
+        where = "/".join(x for x in (self.computation, self.op) if x)
+        loc = f" [{where}]" if where else ""
+        case = f" ({self.case})" if self.case else ""
+        return f"{self.rule}{case}: {self.message}{loc}"
+
+
+@dataclasses.dataclass
+class WireExpectation:
+    """R2 expectation for one replica-group size (== one topology level)."""
+    expected_bytes: float            # registry wire_words_fn x dtype bytes
+    claimed_bytes: float             # SyncStats.sent_words x dtype bytes
+    kinds: Tuple[str, ...]           # allowed base collective kinds
+    claim_exact: bool = True         # saturable: claim == wire, else <=
+
+
+@dataclasses.dataclass
+class Subject:
+    """One lowered program under verification."""
+    label: str
+    module: Optional[HloModule] = None     # optimized HLO, parsed
+    stablehlo_text: str = ""               # pre-optimization lowering
+    jaxpr: Any = None                      # ClosedJaxpr (R4 dependence)
+    expected_fences: int = 0               # run_schedule barriers expected
+    fences_collective_free: bool = False   # flat pipeline: see R4
+    wire: Optional[Dict[int, WireExpectation]] = None
+    exempt: Tuple[str, ...] = ()
+
+
+RuleFn = Callable[[Subject], List[Finding]]
+RULES: Dict[str, Tuple[str, RuleFn]] = {}
+
+
+def rule(rid: str, title: str):
+    def deco(fn: RuleFn) -> RuleFn:
+        RULES[rid] = (title, fn)
+        return fn
+    return deco
+
+
+def run_rules(subject: Subject) -> List[Finding]:
+    findings: List[Finding] = []
+    for rid in sorted(RULES):
+        if rid in subject.exempt:
+            continue
+        _title, fn = RULES[rid]
+        for f in fn(subject):
+            f.case = f.case or subject.label
+            findings.append(f)
+    return findings
+
+
+# ---------------------------------------------------------------- R1
+
+@rule("R1", "sort-free encode")
+def _r1_no_sorts(s: Subject) -> List[Finding]:
+    out = []
+    if s.stablehlo_text:
+        for hit in hlo_ir.find_sort_ops(s.stablehlo_text):
+            out.append(Finding("R1", f"sort in lowering: {hit}"))
+    if s.module is not None:
+        for comp, op in s.module.all_ops():
+            if op.kind == "sort":
+                out.append(Finding("R1", "sort op in optimized HLO",
+                                   computation=comp, op=op.name))
+    return out
+
+
+def find_sorts(text: str) -> List[str]:
+    """Shared sort check for tests: StableHLO or optimized HLO text in,
+    human-readable hit descriptions out (empty == sort-free)."""
+    return hlo_ir.find_sort_ops(text)
+
+
+# ---------------------------------------------------------------- R2
+
+# collective-permute carries source_target_pairs, not replica_groups — a
+# single permute op's pair structure cannot recover the communicator size
+# (a shift-by-4 stage on an 8-ring looks like four disjoint 2-cycles).
+# Levels whose expected kinds are permute-only are therefore verified as
+# a pooled byte total across all such levels instead of per group size;
+# the per-level SyncStats claim is still held to the registry formula.
+POOLED_KINDS = frozenset({"collective-permute"})
+
+
+def _claim_findings(exp: WireExpectation, got: float, where: str
+                    ) -> List[Finding]:
+    if exp.claim_exact:
+        if abs(exp.claimed_bytes - got) > REL_TOL * max(1.0, got):
+            return [Finding(
+                "R2", f"{where}: SyncStats claim {exp.claimed_bytes:.0f} B "
+                      f"!= wire {got:.0f} B (scheme is marked saturable)")]
+    elif exp.claimed_bytes > got * (1 + REL_TOL) + REL_TOL:
+        return [Finding(
+            "R2", f"{where}: SyncStats claim {exp.claimed_bytes:.0f} B "
+                  f"exceeds wire {got:.0f} B")]
+    return []
+
+
+@rule("R2", "wire-exact collective bytes")
+def _r2_wire_exact(s: Subject) -> List[Finding]:
+    if s.module is None or s.wire is None:
+        return []
+    out = []
+    pooled = {g: e for g, e in s.wire.items()
+              if e.kinds and set(e.kinds) <= POOLED_KINDS}
+    grouped = {g: e for g, e in s.wire.items() if g not in pooled}
+    measured = hlo_ir.collective_wire(s.module)
+    by_group: Dict[int, float] = {}
+    pooled_got = 0.0
+    for (base, g), b in measured.items():
+        if base in POOLED_KINDS and pooled:
+            pooled_got += b
+            continue
+        by_group[g] = by_group.get(g, 0.0) + b
+        exp = grouped.get(g)
+        if exp is None:
+            out.append(Finding(
+                "R2", f"collective {base} at unexpected group size {g} "
+                      f"({b:.0f} wire bytes; levels expect "
+                      f"{sorted(s.wire)})"))
+        elif base not in exp.kinds:
+            out.append(Finding(
+                "R2", f"unexpected collective kind {base} at group size "
+                      f"{g} (registry expects {exp.kinds})"))
+    for g, exp in sorted(grouped.items()):
+        got = by_group.get(g, 0.0)
+        if abs(got - exp.expected_bytes) > REL_TOL * max(
+                1.0, exp.expected_bytes):
+            out.append(Finding(
+                "R2", f"group size {g}: measured wire {got:.0f} B != "
+                      f"expected {exp.expected_bytes:.0f} B"))
+            continue
+        out.extend(_claim_findings(exp, got, f"group size {g}"))
+    if pooled:
+        want = sum(e.expected_bytes for e in pooled.values())
+        if abs(pooled_got - want) > REL_TOL * max(1.0, want):
+            out.append(Finding(
+                "R2", f"pooled collective-permute wire {pooled_got:.0f} B "
+                      f"!= expected {want:.0f} B (levels {sorted(pooled)})"))
+        for g, exp in sorted(pooled.items()):
+            out.extend(_claim_findings(exp, exp.expected_bytes,
+                                       f"group size {g} (pooled)"))
+    return out
+
+
+# ---------------------------------------------------------------- R3
+
+def _operand_dtypes(op: hlo_ir.HloOp) -> List[str]:
+    return [dt for dt, _dims in hlo_ir.SHAPE_RE.findall(op.rest)
+            if dt in DTYPE_BYTES]
+
+
+@rule("R3", "no silent promotion")
+def _r3_no_promotion(s: Subject) -> List[Finding]:
+    if s.module is None:
+        return []
+    out = []
+    for comp, op in s.module.all_ops():
+        if any(lf.dtype == "f64" for lf in op.leaves):
+            what = ("f32->f64 convert" if op.kind == "convert"
+                    else f"f64 result on {op.kind}")
+            out.append(Finding("R3", f"double precision leak: {what}",
+                               computation=comp, op=op.name))
+        elif op.kind in ("reduce", "reduce-window"):
+            ins = _operand_dtypes(op)
+            res = op.leaves[0].dtype if op.leaves else None
+            if ins and res and DTYPE_BYTES[res] < DTYPE_BYTES[ins[0]]:
+                out.append(Finding(
+                    "R3", f"reduction accumulator {res} narrower than "
+                          f"input {ins[0]}", computation=comp, op=op.name))
+    return out
+
+
+# ---------------------------------------------------------------- R4
+
+def _sub_jaxprs(eqn) -> List[Any]:
+    subs = []
+    for v in eqn.params.values():
+        vals = v if isinstance(v, (list, tuple)) else (v,)
+        for x in vals:
+            if hasattr(x, "eqns"):
+                subs.append(x)
+            elif hasattr(x, "jaxpr") and hasattr(x.jaxpr, "eqns"):
+                subs.append(x.jaxpr)
+    return subs
+
+
+def _contains_collective(jaxpr) -> bool:
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in COLLECTIVE_PRIMS:
+            return True
+        if any(_contains_collective(sub) for sub in _sub_jaxprs(eqn)):
+            return True
+    return False
+
+
+def _walk_jaxprs(jaxpr):
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        for sub in _sub_jaxprs(eqn):
+            yield from _walk_jaxprs(sub)
+
+
+def fence_dependence_findings(closed_jaxpr, case: str = "") -> List[Finding]:
+    """Flag optimization_barrier inputs that depend on a collective.
+
+    In the flat run_schedule pipeline every fence carries encode outputs
+    only; a fence input tainted by a collective means encode(i+1) has a
+    data dependence on commit(i) — the double-buffering overlap is dead.
+    (Hierarchical pipelines fence the intra-stage result by design; this
+    check is only run on flat subjects.)
+    """
+    out = []
+    root = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    for j in _walk_jaxprs(root):
+        tainted: set = set()
+        for eqn in j.eqns:
+            is_coll = (eqn.primitive.name in COLLECTIVE_PRIMS
+                       or any(_contains_collective(sub)
+                              for sub in _sub_jaxprs(eqn)))
+            in_tainted = [v for v in eqn.invars
+                          if type(v).__name__ != "Literal" and v in tainted]
+            if eqn.primitive.name == "optimization_barrier" and in_tainted:
+                out.append(Finding(
+                    "R4", "optimization_barrier input depends on a "
+                          "collective — encode(i+1) is not independent "
+                          "of commit(i)", case=case,
+                    op=eqn.primitive.name))
+            if is_coll or in_tainted:
+                tainted.update(eqn.outvars)
+    return out
+
+
+@rule("R4", "overlap fences present")
+def _r4_fences(s: Subject) -> List[Finding]:
+    out = []
+    if s.expected_fences > 0:
+        # the barrier survives into StableHLO; XLA's scheduler consumes it
+        # during compilation, so presence is checked pre-optimization.
+        got = len(re.findall(r"optimization_barrier", s.stablehlo_text))
+        if got < s.expected_fences:
+            out.append(Finding(
+                "R4", f"expected >= {s.expected_fences} optimization_"
+                      f"barriers in the lowering, found {got} — the "
+                      f"run_schedule fences were dropped"))
+    if s.fences_collective_free and s.jaxpr is not None:
+        out.extend(fence_dependence_findings(s.jaxpr, case=s.label))
+    return out
+
+
+# ---------------------------------------------------------------- R5
+
+@rule("R5", "no dynamic fallbacks")
+def _r5_static(s: Subject) -> List[Finding]:
+    if s.module is None:
+        return []
+    out = []
+    for comp, op in s.module.all_ops():
+        if op.kind == "while" and op.trip_count is None:
+            out.append(Finding(
+                "R5", "while without known_trip_count (dynamic loop in a "
+                      "sync program)", computation=comp, op=op.name))
+        elif op.kind in _HOSTISH_KINDS:
+            out.append(Finding("R5", f"host-transfer op {op.kind}",
+                               computation=comp, op=op.name))
+        elif op.kind == "custom-call":
+            m = re.search(r'custom_call_target="([^"]*)"', op.rest)
+            if m and _HOSTISH_TARGET.search(m.group(1)):
+                out.append(Finding(
+                    "R5", f"host callback custom-call {m.group(1)!r}",
+                    computation=comp, op=op.name))
+    return out

@@ -208,47 +208,117 @@ SCHEMES: Mapping[str, Callable[[SparsityProfile, int], float]] = \
 ROUNDS: Mapping[str, Callable[[int], float]] = _RegistryView("rounds_fn")
 
 
+# --- zenlint wire contracts (repro.analysis; DESIGN.md §13) ----------------
+# wire_words_fn(M, n, kw): the EXACT per-device wire words the lowered
+# program emits at stage kwargs ``kw`` (value width 1) — capacity-shaped,
+# unlike volume_fn's density-shaped estimate.  The zenlint driver compares
+# these against trip-weighted HLO collective bytes per replica-group size;
+# they must mirror the collectives in core/schemes.py op for op.
+
+def _wire_dense(M: int, n: int, kw: dict) -> float:
+    return 2.0 * (n - 1) / n * M
+
+
+def _wire_zen(M: int, n: int, kw: dict) -> float:
+    lo = kw["layout"]
+    cp = lo.r1 + lo.r2  # a2a row width == pull compaction budget
+    if kw.get("use_hash_bitmap", True):
+        return float((n - 1) * (3 * cp + lo.cap_bitmap_words))
+    return float((n - 1) * 4 * cp)
+
+
+def _wire_agsparse(M: int, n: int, kw: dict) -> float:
+    return 2.0 * (n - 1) * kw["capacity"]
+
+
+def _wire_sparcml(M: int, n: int, kw: dict) -> float:
+    return sum(2.0 * min(kw["capacity"] * (2 ** s) * 2, M)
+               for s in range(int(math.log2(n))))
+
+
+def _wire_sparse_ps(M: int, n: int, kw: dict) -> float:
+    return 2.0 * (n - 1) * (kw["cap_push"] + kw["cap_pull"])
+
+
+def _wire_omnireduce(M: int, n: int, kw: dict) -> float:
+    return float((n - 1) * (kw["cap_push"] + kw["cap_pull"])
+                 * (1 + kw["block"]))
+
+
+def _wire_balanced(M: int, n: int, kw: dict) -> float:
+    B = min(M, kw.get("bins") or BALANCED_BINS)
+    cap_push = kw["cap_push"]
+    cap_pull = kw.get("cap_pull") or cap_push
+    return 2.0 * (n - 1) / n * B + 2.0 * (n - 1) * (cap_push + cap_pull)
+
+
 # --- scheme registrations (the single surface — DESIGN.md §12) -------------
 # Order matters twice: ``plan_candidates`` keeps registration order, so
 # dense must come first (argmin ties resolve dense) and balanced last
 # (a new candidate must not steal exact ties from the historical set).
 # ``sync_fn`` strings resolve lazily on repro.core.schemes: this module
 # stays importable without jax (analysis-only rigs).
+#
+# lint_caps_fn sizes a stage so a FULLY DENSE [*, M] payload exactly
+# saturates every buffer — that is what makes the SyncStats claim equal
+# the wire bytes (R2's ==) for lint_saturable schemes.  Zen's buffers are
+# r1_factor-overprovisioned by design (claim <= wire, never ==), so it is
+# not saturable and lints at its working density instead.
 
 _registry.register_scheme(
     "dense", "dense_sync", dense_allreduce, lambda n: 2.0 * (n - 1),
-    plan_candidate=True)
+    plan_candidate=True,
+    wire_words_fn=_wire_dense, expected_collectives=("all-reduce",),
+    lint_saturable=True, lint_caps_fn=lambda M, n: {})
 _registry.register_scheme(
     "zen", "zen_sync", zen, lambda n: 2.0 * (n - 1),
     stage_args=("layout", "use_hash_bitmap", "backend", "interpret", "fused"),
-    required_args=("layout",), plan_candidate=True)
+    required_args=("layout",), plan_candidate=True,
+    wire_words_fn=_wire_zen,
+    expected_collectives=("all-to-all", "all-gather"),
+    lint_saturable=False, lint_density=0.25)
 _registry.register_scheme(
     "agsparse", "agsparse_sync", agsparse, lambda n: float(n - 1),
     stage_args=("capacity",), required_args=("capacity",),
-    plan_candidate=True)
+    plan_candidate=True,
+    wire_words_fn=_wire_agsparse, expected_collectives=("all-gather",),
+    lint_saturable=True, lint_caps_fn=lambda M, n: {"capacity": M})
 _registry.register_scheme(
     "sparcml", "sparcml_sync", sparcml,
     lambda n: float(math.ceil(math.log2(max(n, 2)))),
     stage_args=("capacity",), required_args=("capacity",), needs_n=True,
-    plan_candidate=True, feasible_fn=lambda n, M: n & (n - 1) == 0)
+    plan_candidate=True, feasible_fn=lambda n, M: n & (n - 1) == 0,
+    wire_words_fn=_wire_sparcml,
+    expected_collectives=("collective-permute",),
+    lint_saturable=True, lint_caps_fn=lambda M, n: {"capacity": M})
 _registry.register_scheme(
     "sparse_ps", "sparse_ps_sync", sparse_ps, lambda n: 2.0 * (n - 1),
     stage_args=("capacity", "cap_push", "cap_pull"),
     required_args=(("cap_push", "capacity"), ("cap_pull", "capacity")),
     arg_aliases=(("capacity", ("cap_push", "cap_pull")),),
-    needs_n=True, feasible_fn=lambda n, M: M % n == 0)
+    needs_n=True, feasible_fn=lambda n, M: M % n == 0,
+    wire_words_fn=_wire_sparse_ps,
+    expected_collectives=("all-to-all", "all-gather"),
+    lint_saturable=True, lint_caps_fn=lambda M, n: {"capacity": M // n})
 _registry.register_scheme(
     "omnireduce", "omnireduce_sync", omnireduce, lambda n: 2.0 * (n - 1),
     stage_args=("capacity", "cap_push", "cap_pull", "block"),
     required_args=(("cap_push", "capacity"), ("cap_pull", "capacity")),
     arg_aliases=(("capacity", ("cap_push", "cap_pull")),),
-    arg_defaults=(("block", 8),), needs_n=True)
+    arg_defaults=(("block", 8),), needs_n=True,
+    wire_words_fn=_wire_omnireduce,
+    expected_collectives=("all-to-all", "all-gather"),
+    lint_saturable=True,
+    lint_caps_fn=lambda M, n: {"block": 8, "capacity": M // n // 8})
 _registry.register_scheme(
     "balanced", "balanced_sync", balanced, lambda n: 4.0 * (n - 1),
     stage_args=("capacity", "cap_push", "cap_pull", "bins"),
     required_args=(("cap_push", "capacity"),),
     arg_aliases=(("capacity", ("cap_push", "cap_pull")),),
-    needs_n=True, plan_candidate=True)
+    needs_n=True, plan_candidate=True,
+    wire_words_fn=_wire_balanced,
+    expected_collectives=("all-reduce", "all-to-all", "all-gather"),
+    lint_saturable=True, lint_caps_fn=lambda M, n: {"capacity": M // n})
 # analytic-only curves (no executable collective): Fig. 7's optimum and
 # the information-theoretic floor
 _registry.register_scheme(

@@ -90,6 +90,25 @@ class SchemeSpec:
     plan_candidate: bool = False              # choose_plan may pick it
     feasible_fn: Callable[[int, int], bool] | None = None  # (n, M) -> bool
 
+    # -- zenlint metadata (repro.analysis; DESIGN.md §13) -----------------
+    # wire_words_fn(M, n, kw) -> exact per-device wire words the lowered
+    # program must emit at the given stage kwargs (value width 1); kw is
+    # the stage_kwargs() output.  None on an executable scheme is itself
+    # a lint finding: a scheme cannot land without its wire contract.
+    wire_words_fn: Callable | None = None
+    # HLO base collective kinds the lowering may contain ("all-reduce",
+    # "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+    expected_collectives: tuple[str, ...] = ()
+    # saturable: a fully-dense payload at lint_caps_fn caps makes the
+    # SyncStats claim equal the wire exactly (R2 ==); zen's hash buffers
+    # are r1_factor over-provisioned by design, so it is not (claim <=)
+    lint_saturable: bool = False
+    lint_density: float = 1.0                 # payload density for the sweep
+    # lint_caps_fn(M, n) -> StageArgs kwargs that exactly saturate the
+    # scheme at that payload (schemes taking a layout build it in-driver)
+    lint_caps_fn: Callable | None = None
+    lint_exempt: tuple[str, ...] = ()         # waived rule ids, e.g. ("R5",)
+
     @property
     def executable(self) -> bool:
         return self.sync_fn is not None
@@ -130,6 +149,12 @@ def register_scheme(
     needs_n: bool = False,
     plan_candidate: bool = False,
     feasible_fn: Callable[[int, int], bool] | None = None,
+    wire_words_fn: Callable | None = None,
+    expected_collectives: tuple[str, ...] = (),
+    lint_saturable: bool = False,
+    lint_density: float = 1.0,
+    lint_caps_fn: Callable | None = None,
+    lint_exempt: tuple[str, ...] = (),
 ) -> SchemeSpec:
     """Register one scheme.  Re-registering a name replaces it (tests)."""
     valid = {f.name for f in dataclasses.fields(StageArgs)}
@@ -143,7 +168,11 @@ def register_scheme(
         rounds_fn=rounds_fn, stage_args=tuple(stage_args),
         required_args=tuple(required_args), arg_aliases=tuple(arg_aliases),
         arg_defaults=tuple(arg_defaults), needs_n=needs_n,
-        plan_candidate=plan_candidate, feasible_fn=feasible_fn)
+        plan_candidate=plan_candidate, feasible_fn=feasible_fn,
+        wire_words_fn=wire_words_fn,
+        expected_collectives=tuple(expected_collectives),
+        lint_saturable=lint_saturable, lint_density=lint_density,
+        lint_caps_fn=lint_caps_fn, lint_exempt=tuple(lint_exempt))
     _REGISTRY[name] = spec
     return spec
 

@@ -337,12 +337,6 @@ class GradSync:
                 layout=self._layouts[bucket.key, level],
                 use_hash_bitmap=self.cfg.use_hash_bitmap,
                 backend=self.cfg.backend)
-        if (bucket.kind == bk.DENSE and bucket.compress == "none"
-                and stage.scheme == "dense"):
-            # fused flat psum (no mean here: one division at the end)
-            out = lax.psum(g, lvl.axis)
-            words = jnp.float32(2 * (lvl.size - 1) / lvl.size) * g.size
-            return out, SyncStats(sent_words=words, overflow=jnp.int32(0))
         args = self._stage_args(bucket, stage.scheme, level)
         return schemes.stage_sync(stage.scheme, g, axis=lvl.axis,
                                   n=lvl.size, stage_args=args)

@@ -3,8 +3,8 @@
 ``compiled.cost_analysis()`` counts each computation ONCE — a ``lax.scan``
 over 62 layers contributes a single body's FLOPs, which would understate the
 roofline by ~62x.  XLA does annotate loops with
-``backend_config={"known_trip_count":{"n":...}}``, so this module parses the
-optimized HLO text and walks the call graph, multiplying every while body
+``backend_config={"known_trip_count":{"n":...}}``, so this module walks the
+parsed call graph (``repro.analysis.hlo_ir``), multiplying every while body
 (and its collectives) by its trip count.
 
 Heuristics (documented for §Roofline):
@@ -16,12 +16,9 @@ Heuristics (documented for §Roofline):
     dynamic-slice reading 1/L of a stacked weight would otherwise charge
     the whole stack every layer).
   * Collective bytes: true per-device WIRE volumes, trip-weighted, with
-    ring factors derived from the op's replica-group size g:
-      all-reduce        2(g-1)/g x result      (reduce-scatter + all-gather)
-      all-gather        (g-1)/g x result       (result = gathered buffer)
-      reduce-scatter    (g-1)   x result       (result = scattered shard)
-      all-to-all        (g-1)/g x result
-      collective-permute 1      x result
+    ring factors derived from the op's replica-group size g (see
+    ``hlo_ir.WIRE_FACTOR``).  Async pairs (``all-reduce-start``/``-done``)
+    count exactly once, at the start op's result half of the tuple.
   * ``exclude_bytes_re``: ops whose metadata op_name matches are excluded
     from the HBM-bytes term (used to model buffers a fused kernel keeps in
     VMEM, e.g. flash-attention score blocks); their FLOPs still count.
@@ -30,54 +27,26 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
-DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
-    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
-    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
-}
+from repro.analysis.hlo_ir import (  # noqa: F401  (re-exported API)
+    COLLECTIVE_KINDS as COLLECTIVES,
+    DTYPE_BYTES,
+    SHAPE_RE,
+    WIRE_FACTOR,
+    HloModule,
+    HloOp,
+    parse_shape,
+)
 
-SHAPE_RE = re.compile(r"([a-z]\d*[a-z]*\d*)\[([0-9,]*)\]")
-COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
-OP_LINE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[a-z]\d*[a-z]*\d*"
-    r"\[[0-9,]*\](?:{[^}]*})?))\s+([\w\-]+)\((.*)$")
-TRIP_RE = re.compile(r'"known_trip_count":{"n":"(\d+)"}')
-CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
-BODY_RE = re.compile(r"body=%?([\w.\-]+)")
-COND_RE = re.compile(r"condition=%?([\w.\-]+)")
-BRANCHES_RE = re.compile(r"branch_computations={([^}]*)}")
-TF_RE = re.compile(r"(?:true|false)_computation=%?([\w.\-]+)")
 LHS_C = re.compile(r"lhs_contracting_dims={([0-9,]*)}")
 OPERANDS_RE = re.compile(r"%([\w.\-]+)")
-GROUPS_RE = re.compile(r"replica_groups={{([0-9,]*)}")
-OPNAME_RE = re.compile(r'op_name="([^"]*)"')
-
-COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-               "collective-permute")
 
 
 def shape_elems_bytes(spec: str) -> tuple[int, int]:
-    elems = byts = 0
-    for dt, dims in SHAPE_RE.findall(spec):
-        if dt not in DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        elems += n
-        byts += n * DTYPE_BYTES[dt]
-    return elems, byts
-
-
-@dataclasses.dataclass
-class Op:
-    name: str
-    shape: str
-    kind: str
-    rest: str
+    leaves = parse_shape(spec)
+    return (sum(lf.elems for lf in leaves),
+            sum(lf.nbytes for lf in leaves))
 
 
 @dataclasses.dataclass
@@ -93,135 +62,86 @@ class Cost:
             self.coll[k] = self.coll.get(k, 0.0) + v * mult
 
 
-def parse_computations(hlo: str) -> Dict[str, List[Op]]:
-    comps: Dict[str, List[Op]] = {}
-    cur: Optional[str] = None
-    entry = None
-    for line in hlo.splitlines():
-        m = COMP_HDR.match(line.strip()) if "{" in line else None
-        if m and ("->" in line):
-            cur = m.group(1)
-            comps[cur] = []
-            if line.strip().startswith("ENTRY"):
-                entry = cur
-            continue
-        if cur is None:
-            continue
-        if line.strip() == "}":
-            cur = None
-            continue
-        om = OP_LINE.match(line)
-        if om:
-            comps[cur].append(Op(om.group(1), om.group(2), om.group(3),
-                                 om.group(4)))
-    comps["__entry__"] = comps.get(entry, [])
-    return comps
-
-
-def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
-    _, rb = shape_elems_bytes(op.shape)
-    relems, _ = shape_elems_bytes(op.shape)
-    # contraction size from lhs operand shape
+def _dot_flops(op: HloOp, shapes: Dict[str, str]) -> float:
+    relems = op.result_elems
     operands = OPERANDS_RE.findall(op.rest.split(")", 1)[0])
     contr = 1
     lm = LHS_C.search(op.rest)
     if operands and lm:
-        lhs_shape = shapes.get(operands[0], "")
-        m2 = SHAPE_RE.search(lhs_shape)
-        if m2:
-            dims = [int(d) for d in m2.group(2).split(",") if d]
+        lhs = parse_shape(shapes.get(operands[0], ""))
+        if lhs:
+            dims = lhs[0].dims
             for ci in lm.group(1).split(","):
                 if ci and int(ci) < len(dims):
                     contr *= dims[int(ci)]
     return 2.0 * relems * contr
 
 
-def _group_size(rest: str) -> int:
-    m = GROUPS_RE.search(rest)
-    if not m:
-        return 2
-    return max(2, m.group(1).count(",") + 1)
-
-
-WIRE_FACTOR = {
-    "all-reduce": lambda g: 2 * (g - 1) / g,
-    "all-gather": lambda g: (g - 1) / g,
-    "reduce-scatter": lambda g: float(g - 1),
-    "all-to-all": lambda g: (g - 1) / g,
-    "collective-permute": lambda g: 1.0,
-}
-
-
-def walk(comps: Dict[str, List[Op]], name: str,
-         memo: Dict[str, Cost], *, top: bool = True,
+def walk(module: HloModule, name: str, memo: Dict[str, Cost], *,
          exclude_bytes_re: Optional[re.Pattern] = None) -> Cost:
     if name in memo:
         return memo[name]
     memo[name] = Cost()  # cycle guard
     total = Cost()
-    ops = comps.get(name, [])
+    comp = module.computations.get(name)
+    ops = comp.ops if comp else []
     shapes = {op.name: op.shape for op in ops}
+
+    def sub(child: str) -> Cost:
+        return walk(module, child, memo, exclude_bytes_re=exclude_bytes_re)
+
     for op in ops:
-        relems, rbytes = shape_elems_bytes(op.shape)
-        if exclude_bytes_re is not None:
-            nm = OPNAME_RE.search(op.rest)
-            if nm and exclude_bytes_re.search(nm.group(1)):
-                rbytes = 0
+        rbytes = op.result_bytes
+        if exclude_bytes_re is not None and op.op_name \
+                and exclude_bytes_re.search(op.op_name):
+            rbytes = 0
         if op.kind == "dot":
             total.flops += _dot_flops(op, shapes)
             total.bytes += 2 * rbytes
         elif op.kind == "fusion":
-            cm = CALLS_RE.search(op.rest)
-            if cm:
-                sub = walk(comps, cm.group(1), memo, top=False, exclude_bytes_re=exclude_bytes_re)
-                total.flops += sub.flops
-                for k, v in sub.coll.items():
+            for child in op.called:
+                s = sub(child)
+                total.flops += s.flops
+                for k, v in s.coll.items():
                     total.coll[k] = total.coll.get(k, 0.0) + v
             # bytes at the fusion boundary only (result, written+read)
             total.bytes += 2 * rbytes
         elif op.kind == "while":
-            bm, cm = BODY_RE.search(op.rest), COND_RE.search(op.rest)
-            tm = TRIP_RE.search(op.rest)
-            trip = int(tm.group(1)) if tm else 1
-            if bm:
-                total.add(walk(comps, bm.group(1), memo, top=False, exclude_bytes_re=exclude_bytes_re), trip)
-            if cm:
-                total.add(walk(comps, cm.group(1), memo, top=False, exclude_bytes_re=exclude_bytes_re), trip)
+            trip = op.trip_count or 1
+            for child in op.called:
+                total.add(sub(child), trip)
         elif op.kind == "conditional":
-            branches = BRANCHES_RE.search(op.rest)
-            names = ([b.strip().lstrip("%") for b in
-                      branches.group(1).split(",")] if branches
-                     else TF_RE.findall(op.rest))
-            subs = [walk(comps, b, memo, top=False, exclude_bytes_re=exclude_bytes_re) for b in names]
+            subs = [sub(child) for child in op.called]
             if subs:
-                best = max(subs, key=lambda c: c.flops)
-                total.add(best)
+                total.add(max(subs, key=lambda c: c.flops))
         elif op.kind in ("call", "async-start"):
-            cm = CALLS_RE.search(op.rest) or BODY_RE.search(op.rest)
-            if cm:
-                total.add(walk(comps, cm.group(1), memo, top=False, exclude_bytes_re=exclude_bytes_re))
-        elif op.kind.startswith(COLLECTIVES):
-            kind = next(c for c in COLLECTIVES if op.kind.startswith(c))
-            g = _group_size(op.rest)
-            wire = WIRE_FACTOR[kind](g) * rbytes
-            total.coll[kind] = total.coll.get(kind, 0.0) + wire
-            total.bytes += rbytes
+            for child in op.called:
+                total.add(sub(child))
+        elif op.collective is not None:
+            base, role = op.collective
+            if role == "done":
+                continue  # the -start already charged this transfer
+            data = op.wire_data_bytes
+            g = op.group_size or 2
+            total.coll[base] = (total.coll.get(base, 0.0)
+                                + WIRE_FACTOR[base](g) * data)
+            total.bytes += data if rbytes else 0
         elif op.kind in ("parameter", "constant", "get-tuple-element",
-                         "tuple", "bitcast"):
+                         "tuple", "bitcast", "async-done", "async-update"):
             pass
         else:
             # elementwise / copy / reduce / gather / scatter / dynamic-slice
-            total.flops += relems
+            total.flops += op.result_elems
             total.bytes += 2 * rbytes
     memo[name] = total
     return total
 
 
 def analyze(hlo_text: str, exclude_bytes_re: str | None = None) -> dict:
-    comps = parse_computations(hlo_text)
+    module = HloModule.parse(hlo_text)
     memo: Dict[str, Cost] = {}
     pat = re.compile(exclude_bytes_re) if exclude_bytes_re else None
-    c = walk(comps, "__entry__", memo, exclude_bytes_re=pat)
+    c = walk(module, module.entry_name or "", memo, exclude_bytes_re=pat)
     return {
         "flops": c.flops,
         "bytes": c.bytes,

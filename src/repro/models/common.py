@@ -273,11 +273,10 @@ class ShardCtx:
         """
         if self.tp == 1:
             return x
-        axis = self.tp_axis
 
         @jax.custom_jvp
         def f(y):
-            return lax.pmax(y, axis)
+            return lax.pmax(y, self.tp_axis)
 
         @f.defjvp
         def _jvp(primals, tangents):

@@ -7,8 +7,6 @@ Three properties the perf work must not break:
   * the sort-free compaction / serial ranking agree with the old
     argsort-based references on random inputs.
 """
-import re
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -87,14 +85,18 @@ def test_hierarchical_hash_backend_parity():
 
 @pytest.mark.parametrize("backend", ["xla", "pallas"])
 def test_zen_sync_hlo_contains_no_sort(backend):
+    # same check as zenlint rule R1 (repro.analysis.rules) — shared here
+    # so the assertion and the CI gate can never drift apart
+    from repro.analysis.rules import find_sorts
+
     n, m = 4, 2048
     layout = schemes.make_zen_layout(m, n, density_budget=0.2)
     fn = jax.jit(lambda v: schemes.simulate(
         schemes.zen_sync, v, layout=layout, backend=backend, interpret=True))
     x = jnp.zeros((n, m))
     for text in (fn.lower(x).as_text(), fn.lower(x).compile().as_text()):
-        assert not re.search(r"\bsort\(|stablehlo\.sort", text), (
-            f"{backend} zen_sync HLO contains a sort op")
+        assert not find_sorts(text), (
+            f"{backend} zen_sync HLO contains a sort op: {find_sorts(text)}")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,232 @@
+"""zenlint: IR parsing, rule catalog, AST rules, and golden fixtures.
+
+The golden known-bad HLO fixtures (tests/fixtures/hlo/) each violate
+exactly one paper invariant and must be flagged by exactly that rule —
+a rule that fires on its neighbor's fixture is over-matching, one that
+misses its own is dead.  The IR tests pin the two parsing fixes over the
+old hlo_cost walker (nested-tuple results, async start/done pairs).
+"""
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import ast_rules, hlo_ir, rules
+from repro.analysis.hlo_ir import HloModule
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXDIR = os.path.join(ROOT, "tests", "fixtures", "hlo")
+
+
+def _fixture(name: str) -> str:
+    with open(os.path.join(FIXDIR, name)) as f:
+        return f.read()
+
+
+# ---------------------------------------------------------------------------
+# golden fixtures: each bad module trips exactly its intended rule
+# ---------------------------------------------------------------------------
+
+def _subject(name: str) -> rules.Subject:
+    text = _fixture(name)
+    if name == "bad_fence.txt":  # StableHLO with the pipeline fences gone
+        return rules.Subject(label=name, stablehlo_text=text,
+                             expected_fences=2)
+    return rules.Subject(label=name, module=HloModule.parse(text),
+                         stablehlo_text=text)
+
+
+@pytest.mark.parametrize("name,want", [
+    ("clean.txt", set()),
+    ("bad_sort.txt", {"R1"}),
+    ("bad_f64.txt", {"R3"}),
+    ("bad_fence.txt", {"R4"}),
+    ("bad_while.txt", {"R5"}),
+])
+def test_fixture_flags_exactly_intended_rule(name, want):
+    findings = rules.run_rules(_subject(name))
+    got = {f.rule for f in findings}
+    assert got == want, [str(f) for f in findings]
+
+
+def test_fences_present_passes():
+    text = _fixture("bad_fence.txt").replace(
+        "return %3", "%4 = stablehlo.optimization_barrier %3 : "
+                     "tensor<64xf32>\n    return %4")
+    s = rules.Subject(label="fenced", stablehlo_text=text,
+                      expected_fences=1)
+    assert rules.run_rules(s) == []
+
+
+def test_lint_exempt_waives_rule():
+    s = _subject("bad_sort.txt")
+    s.exempt = ("R1",)
+    assert rules.run_rules(s) == []
+
+
+# ---------------------------------------------------------------------------
+# IR: nested tuples, async pairs, replica groups, trip weighting
+# ---------------------------------------------------------------------------
+
+PAIR_HLO = textwrap.dedent("""\
+    HloModule pair
+
+    %add (x: f32[], y: f32[]) -> f32[] {
+      %x = f32[] parameter(0)
+      %y = f32[] parameter(1)
+      ROOT %s = f32[] add(%x, %y)
+    }
+
+    ENTRY %main (arg: f32[1024]) -> f32[1024] {
+      %arg = f32[1024]{0} parameter(0)
+      %st = (f32[1024]{0}, f32[1024]{0}) all-reduce-start(%arg), replica_groups={{0,1,2,3},{4,5,6,7}}, use_global_device_ids=true, to_apply=%add
+      ROOT %dn = f32[1024]{0} all-reduce-done(%st)
+    }
+""")
+
+
+def test_async_pair_counted_once():
+    mod = HloModule.parse(PAIR_HLO)
+    assert hlo_ir.count_collectives(mod) == 1
+    wire = hlo_ir.collective_wire(mod)
+    # one start/done pair: 4 KiB payload, ring factor 2(g-1)/g at g=4
+    assert wire == {("all-reduce", 4): pytest.approx(2 * 3 / 4 * 4096)}
+
+
+def test_hlo_cost_analyze_counts_pair_once():
+    from repro.launch import hlo_cost
+    walked = hlo_cost.analyze(PAIR_HLO)
+    assert walked["collective_bytes_total"] == pytest.approx(
+        2 * 3 / 4 * 4096)
+    assert walked["collectives"] == {
+        "all-reduce": pytest.approx(2 * 3 / 4 * 4096)}
+
+
+def test_nested_tuple_result_not_skipped():
+    line = ("  %st = ((f32[8]{0}), f32[8]{0}, u32[]) "
+            "all-reduce-start(%a), replica_groups={{0,1}}, to_apply=%add")
+    parsed = hlo_ir.split_op_line(line)
+    assert parsed is not None
+    name, shape, kind, _rest = parsed
+    assert (name, kind) == ("st", "all-reduce-start")
+    assert len(hlo_ir.tuple_elements(shape)) == 3
+    op = hlo_ir.HloOp(*parsed)
+    # scalar u32 context dropped, then second half of (operand, result)
+    assert op.wire_data_bytes == 32
+
+
+def test_group_size_forms():
+    def mk(rest):
+        return hlo_ir.HloOp("x", "f32[8]", "all-gather", rest)
+    assert mk("%a), replica_groups={{0,1,2,3},{4,5,6,7}}").group_size == 4
+    assert mk("%a), replica_groups=[2,4]<=[8]").group_size == 4
+    assert mk("%a), dimensions={0}").group_size is None
+
+
+def test_trip_weighted_collective_wire():
+    text = _fixture("clean.txt").replace(
+        "%vv = f32[64]{0} multiply(%v, %v)",
+        "%vv = f32[64]{0} all-reduce(%v), replica_groups={{0,1}}, "
+        "use_global_device_ids=true, to_apply=%add")
+    wire = hlo_ir.collective_wire(HloModule.parse(text))
+    # entry all-reduce once + loop-body all-reduce x trip_count 4
+    assert wire == {("all-reduce", 2): pytest.approx(5 * 1.0 * 256)}
+
+
+def test_find_sorts_both_dialects():
+    assert rules.find_sorts(_fixture("bad_sort.txt"))
+    assert rules.find_sorts('  %0 = "stablehlo.sort"(%arg0) ...')
+    assert not rules.find_sorts(_fixture("clean.txt"))
+
+
+# ---------------------------------------------------------------------------
+# R4 dependence check on real jaxprs
+# ---------------------------------------------------------------------------
+
+def test_fence_dependence_on_jaxpr():
+    import jax
+    from jax import lax
+
+    def bad(x):
+        return lax.optimization_barrier(lax.psum(x, "i"))
+
+    def good(x):
+        return lax.psum(lax.optimization_barrier(x), "i")
+
+    def mk(f):
+        return jax.make_jaxpr(f, axis_env=[("i", 2)])(1.0)
+    assert rules.fence_dependence_findings(mk(bad))
+    assert not rules.fence_dependence_findings(mk(good))
+
+
+# ---------------------------------------------------------------------------
+# AST rules on synthetic sources + the live tree
+# ---------------------------------------------------------------------------
+
+def _ast(src: str, relpath: str = "src/repro/train/foo.py"):
+    return {f.rule for f in ast_rules.check_source(
+        textwrap.dedent(src), relpath)}
+
+
+def test_ast1_raw_collective():
+    src = "def f(x):\n    return lax.psum(x, 'data')\n"
+    assert _ast(src) == {"AST1"}
+    assert _ast(src, "src/repro/core/schemes.py") == set()
+    assert _ast(src, "src/repro/kernels/foo.py") == set()
+
+
+def test_ast1_mesh_structure_axes_exempt():
+    assert _ast("def f(self, y):\n"
+                "    return lax.pmax(y, self.tp_axis)\n") == set()
+    assert _ast("def f(self, y):\n"
+                "    return lax.pmean(y, axis_name=self.pod_axis)\n") == set()
+
+
+def test_ast1_waiver_comment():
+    assert _ast("def f(x):\n"
+                "    return lax.psum(x, 'data')  "
+                "# zenlint: ignore[AST1]\n") == set()
+
+
+def test_ast2_scheme_literal_dispatch():
+    assert _ast("def f(scheme):\n    return scheme == 'zen'\n") == {"AST2"}
+    assert _ast("def f(scheme):\n    return scheme == 'dense'\n") == {"AST2"}
+    # "dense" as an architecture kind is not a scheme comparison
+    assert _ast("def f(cfg):\n    return cfg.kind == 'dense'\n") == set()
+    assert _ast("def f(scheme):\n    return scheme == 'zen'\n",
+                "src/repro/core/registry.py") == set()
+
+
+def test_ast3_hardcoded_choices():
+    assert _ast("p.add_argument('--sync', choices=['zen', 'dense'])\n"
+                ) == {"AST3"}
+    assert _ast("p.add_argument('--log', choices=['info', 'debug'])\n"
+                ) == set()
+
+
+def test_live_tree_is_clean(monkeypatch):
+    monkeypatch.chdir(ROOT)
+    findings = ast_rules.run_tree("src/repro")
+    assert findings == [], [str(f) for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# registry lint metadata: the wire contract is complete
+# ---------------------------------------------------------------------------
+
+def test_every_executable_scheme_has_wire_contract():
+    from repro.core import registry as sreg
+    for name in sreg.registered_schemes(executable_only=True):
+        spec = sreg.get_scheme(name)
+        assert spec.wire_words_fn is not None, name
+        assert spec.expected_collectives, name
+        assert spec.lint_caps_fn is not None or "layout" in spec.stage_args, \
+            f"{name}: no lint_caps_fn and no layout-driven capacity"
+
+
+def test_dense_wire_formula():
+    from repro.core import registry as sreg
+    spec = sreg.get_scheme("dense")
+    assert spec.wire_words_fn(4096, 8, {}) == pytest.approx(
+        2 * 7 / 8 * 4096)
+    assert spec.wire_words_fn(4096, 2, {}) == pytest.approx(4096)
