@@ -35,6 +35,10 @@ committed the baseline), and each entry is judged against that scale:
   (fused <= 0.5x the 3-dispatch encode at density <= 0.01, DESIGN.md
   §11) rather than the baseline's ratio — the bar is the PR's
   contract, not a trajectory;
+* ``commit_fused`` entries carry the commit-side counterpart of that
+  bar: fused commit (push megakernel + pull-decode megakernel) <= 0.5x
+  the pre-fusion dispatch chain at density <= 0.01 (DESIGN.md §14),
+  judged on the fresh run's paired ratio;
 * ``balanced_ab`` skew entries are gated absolutely on the fresh run's
   deterministic wire volumes: balanced's bottleneck worker must not
   out-ship agsparse's under full skew (DESIGN.md §12).
@@ -60,6 +64,7 @@ import sys
 VOLUME_KEYS = ("sent_words", "dense_words", "overflow", "intra_words", "inter_words")
 JITTER_US = 500.0  # below this, wall time on shared hosts is pure jitter
 ENCODE_FUSED_BAR = 0.5  # fused <= 0.5x the 3-dispatch encode at d<=0.01
+COMMIT_FUSED_BAR = 0.5  # fused commit <= 0.5x the dispatch chain at d<=0.01
 
 
 def _index(payload: dict) -> dict:
@@ -130,6 +135,30 @@ def _gate_encode_fused(new: dict) -> list:
     return out
 
 
+def _gate_commit_fused(new: dict) -> list:
+    """The commit-side counterpart of ``_gate_encode_fused`` (DESIGN.md
+    §14): the fused commit megakernel pair must cost at most
+    ``COMMIT_FUSED_BAR`` of the pre-fusion dispatch chain at density
+    <= 0.01.  Judged per run on the paired within-run ratio."""
+    pairs: dict = {}
+    for r in new.values():
+        if r.get("stage") != "commit_fused":
+            continue
+        pairs.setdefault(r.get("density"), {})[r.get("arm")] = r["us"]
+    out = []
+    for density in sorted(pairs, key=str):
+        arms = pairs[density]
+        if "fused" not in arms or not arms.get("unfused"):
+            continue
+        ratio = arms["fused"] / arms["unfused"]
+        if density is not None and density <= 0.01 and ratio > COMMIT_FUSED_BAR:
+            out.append(
+                f"commit fused/unfused[d={density}]: {ratio:.2f} > "
+                f"{COMMIT_FUSED_BAR} (fusion win lost)"
+            )
+    return out
+
+
 def _gate_balanced_skew(new: dict) -> list:
     """The balanced scheme's acceptance bar (DESIGN.md §12): under full
     skew (one worker holds every nonzero) the bottleneck worker's wire
@@ -179,7 +208,11 @@ def compare(
             if key in base[name] and base[name][key] != new[name].get(key):
                 drift = f"{base[name][key]} -> {new[name].get(key)}"
                 volume_drift.append(f"{name}.{key}: {drift}")
-        if new[name].get("stage") in ("bucketed_e2e", "encode_fused"):
+        if new[name].get("stage") in (
+            "bucketed_e2e",
+            "encode_fused",
+            "commit_fused",
+        ):
             continue  # wall time gated pairwise below, not cross-run
         if b_us < JITTER_US:
             # sub-0.5ms: observed swinging >3x on idle hosts; report only
@@ -196,6 +229,7 @@ def compare(
             improvements.append(line)
     regressions += _gate_bucketed_pairs(base, new, tolerance)
     regressions += _gate_encode_fused(new)
+    regressions += _gate_commit_fused(new)
     regressions += _gate_balanced_skew(new)
     tol_pct = f"{tolerance:.0%}"
     print(f"bench gate: {len(shared)} entries compared, tolerance {tol_pct}")

@@ -105,6 +105,35 @@ def bench_stages(results: list) -> None:
         _record(results, f"bitmap_unpack[{backend}]", time_fn(unpack, wordsN),
                 stage="bitmap_unpack", backend=backend, density=density)
 
+        # commit-side stages in isolation (DESIGN.md §14): the server
+        # aggregation scatter-add and the pull-capacity compaction were
+        # the uncovered dispatch-tax stages the fused commit removes
+        from repro.kernels import ops as kops
+
+        rng = np.random.default_rng(1)
+        C = N * (lo.r1 + lo.r2)
+        lp_np = rng.integers(0, lo.cap_server, size=C).astype(np.int32)
+        lp_np[rng.random(C) >= min(1.0, N * density)] = lo.cap_server
+        lp = jnp.asarray(lp_np)
+        push_v = jnp.asarray(
+            rng.standard_normal(C).astype(np.float32)
+            * (lp_np < lo.cap_server))
+        scat = jax.jit(functools.partial(
+            kops.batched_coo_reduce_op, backend=backend, interpret=None))
+        buf0 = jnp.zeros(lo.cap_server, jnp.float32)
+        buf = scat(buf0, lp, push_v)
+        _record(results, f"scatter_add[{backend}]",
+                time_fn(scat, buf0, lp, push_v),
+                stage="scatter_add", backend=backend, density=density)
+
+        if backend == "xla":  # compaction is an XLA cumsum on both routes
+            comp = jax.jit(functools.partial(
+                compact_indices, capacity=lo.r1 + lo.r2))
+            _record(results, f"commit_compact[{backend}]",
+                    time_fn(comp, buf != 0),
+                    stage="commit_compact", backend=backend,
+                    density=density)
+
 
 def bench_end_to_end(results: list, densities=DENSITIES) -> None:
     """Full simulate() latency and wire volume per scheme and density."""
@@ -149,18 +178,26 @@ def bench_end_to_end(results: list, densities=DENSITIES) -> None:
             overflow=int(np.asarray(stats.overflow).sum()),
         )
         if scheme == "zen":
-            # per-stage split (DESIGN.md §11): the local encode prefix in
-            # isolation; single-device simulate runs N encodes serially,
-            # so the commit remainder is e2e - N * encode.  Lands in the
-            # run.py JSON "stages" field instead of being flattened into
-            # one wall-clock number.
+            # per-stage split (DESIGN.md §11/§14): the local encode prefix
+            # in isolation, plus a DIRECT commit probe — encodes are
+            # materialized outside the timed function, so commit_us is a
+            # measurement, not the old residual e2e - N * encode (whose
+            # clamp hid the commit share under encode noise; same fix as
+            # CostCalibrator v2).  Lands in the run.py JSON "stages"
+            # field instead of being flattened into one wall-clock number.
             enc = jax.jit(functools.partial(
                 schemes.zen_encode, layout=kwargs["layout"],
                 backend=backend, interpret=None))
             enc_us = time_fn(enc, vals[0])
+            encs = jax.block_until_ready(jax.jit(jax.vmap(enc))(vals))
+            commit_run = jax.jit(jax.vmap(functools.partial(
+                schemes.zen_commit, axis=schemes.AXIS,
+                layout=kwargs["layout"], backend=backend,
+                interpret=None), axis_name=schemes.AXIS))
+            commit_us = time_fn(commit_run, encs, vals) / N
             record_stage_times(
                 "micro_sync", name, encode_us=enc_us,
-                commit_us=max(e2e_us - N * enc_us, 0.0), e2e_us=e2e_us)
+                commit_us=commit_us, e2e_us=e2e_us)
 
 
 def bench_bucketed(results: list, densities=DENSITIES) -> None:
@@ -370,6 +407,81 @@ def bench_encode_fused(results: list, densities=ENC_DENSITIES) -> None:
                 f"(acceptance bar {ENC_RATIO_BAR})")
 
 
+CMT_RATIO_BAR = 0.5              # fused commit <= 0.5x unfused at d<=0.01
+
+
+def bench_commit_fused(results: list, densities=ENC_DENSITIES) -> None:
+    """Fused commit (push megakernel + pull-decode megakernel, DESIGN.md
+    §14) vs the pre-fusion dispatch chain on the 8-worker commit payload.
+    Both arms compute the SAME function — server scatter-add +
+    mask/compact + value gather + bitmap pack, then the batched pull
+    unpack+compact — so bit-exact parity is asserted before timing and
+    the wall-time ratio is purely the fusion win.  The acceptance bar
+    (fused <= 0.5x unfused at d=0.01) is asserted here on every run AND
+    gated pairwise by check_regression (_gate_commit_fused); the two
+    arms are recorded as a pair from one time_ab noise window, like the
+    encode_fused series."""
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(3)
+    for density in densities:
+        lo = schemes.make_zen_layout(
+            M, ENC_N, density_budget=min(0.5, 4 * density))
+        cap_pull = lo.r1 + lo.r2
+        # post-all_to_all commit input: one pidx row from each of ENC_N
+        # peers mapped to server-local positions, EMPTY -> cap_server
+        # sentinel (exactly what schemes.zen_commit feeds the kernels)
+        C = ENC_N * cap_pull
+        lp_np = rng.integers(0, lo.cap_server, size=C).astype(np.int32)
+        live = rng.random(C) < min(1.0, M * density / C)
+        lp_np[~live] = lo.cap_server
+        vals_np = np.where(
+            live, rng.standard_normal(C), 0.0).astype(np.float32)
+        lp, vals = jnp.asarray(lp_np), jnp.asarray(vals_np)
+
+        def _fused(lp, vals, lo=lo, cap_pull=cap_pull):
+            lpos, v, bm, ov = kops.zen_commit_push_fused_op(
+                lp, vals, cap_server=lo.cap_server, cap_pull=cap_pull)
+            all_bm = jnp.tile(bm[None], (ENC_N, 1))  # stands in for the
+            lpos_all = kops.zen_commit_pull_fused_op(  # all_gather result
+                all_bm, lo.cap_server, cap_pull)
+            return lpos, v, bm, ov, lpos_all
+
+        def _unfused(lp, vals, lo=lo, cap_pull=cap_pull):
+            lpos, v, bm, ov = kops.zen_commit_push_unfused(
+                lp, vals, cap_server=lo.cap_server, cap_pull=cap_pull)
+            all_bm = jnp.tile(bm[None], (ENC_N, 1))
+            lpos_all = kops.zen_commit_pull_unfused(
+                all_bm, lo.cap_server, cap_pull)
+            return lpos, v, bm, ov, lpos_all
+
+        fused, unfused = jax.jit(_fused), jax.jit(_unfused)
+        a, b = fused(lp, vals), unfused(lp, vals)
+        for field, x, y in zip(("lpos", "vals", "bitmap", "overflow",
+                                "pull_lpos"), a, b):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), (
+                f"fused commit diverged from the dispatch-chain oracle "
+                f"({field}, d={density})")
+        times = time_ab({"fused": fused, "unfused": unfused}, lp, vals,
+                        rounds=40)
+        for arm in ("fused", "unfused"):
+            _record(results, f"commit_fused[{arm},d={density}]",
+                    times[arm], stage="commit_fused", arm=arm,
+                    density=density, backend="pallas", n_workers=ENC_N)
+        ratio = times["fused"] / times["unfused"]
+        record_stage_times(
+            "micro_sync", f"commit_fused[d={density}]",
+            fused_us=times["fused"], unfused_us=times["unfused"])
+        emit(f"micro_sync/commit_fused_ratio[d={density}]", 0.0,
+             f"fused/unfused={ratio:.3f} bar<={CMT_RATIO_BAR} at d<=0.01")
+        if density <= 0.01:
+            assert ratio <= CMT_RATIO_BAR, (
+                f"fused commit is {ratio:.2f}x the dispatch-chain time at "
+                f"d={density} on the {ENC_N}-worker payload — the "
+                f"megakernel must at least halve the commit "
+                f"(acceptance bar {CMT_RATIO_BAR})")
+
+
 COMPRESS_DENSITIES = (0.01, 0.05)  # smoke keeps 0.01: the acceptance bar
 
 
@@ -455,7 +567,7 @@ def main(argv=()) -> None:
     # stages whose A/B entries are judged as within-run ratios: keep each
     # (stage, density) pair from its least-contended replay as a unit, so
     # the recorded ratio always comes from one time_ab noise window
-    paired_stages = ("bucketed_e2e", "encode_fused")
+    paired_stages = ("bucketed_e2e", "encode_fused", "commit_fused")
     best: dict[str, dict] = {}
     pair_best: dict[tuple, tuple[float, list]] = {}
     for _ in range(repeat):
@@ -470,6 +582,9 @@ def main(argv=()) -> None:
         bench_balanced(results)
         bench_compress(results, compress_densities)
         bench_encode_fused(results, enc_densities)
+        # the commit series keeps d=0.01 in BOTH modes too: the fused
+        # commit <=0.5x bar must hold on every CI bench-gate run
+        bench_commit_fused(results, enc_densities)
         for r in results:
             if r.get("stage") in paired_stages:
                 continue  # merged pairwise below

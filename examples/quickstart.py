@@ -29,7 +29,12 @@ scheme its *measured* encode time on this machine — run
 ``PYTHONPATH=src python -m repro.core.costmodel --calib-file calib.json``
 once to produce the table (train.py auto-calibrates a missing file),
 and 'auto' will pick dense wherever encode cost eats the wire win
-(DESIGN.md §11).
+(DESIGN.md §11).  The table also carries a directly measured
+``commit_us`` — the server-side aggregate+re-encode, which on the
+pallas backend runs as one fused push megakernel and one fused
+pull-decode megakernel (``--no-fused-commit`` on ``launch/train.py``
+switches back to the pre-fusion dispatch chain, bit-identically;
+DESIGN.md §14).
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """

@@ -68,8 +68,14 @@ def _payload(M: int, n: int, density: float):
     return g
 
 
-def _stage_setup(spec, M: int, n_level: int):
-    """(StageArgs, expected wire words) for one level of size n_level."""
+def _stage_setup(spec, M: int, n_level: int, overrides=None):
+    """(StageArgs, expected wire words) for one level of size n_level.
+
+    ``overrides`` — ((StageArgs field, value), ...) from a
+    ``SchemeSpec.lint_routes`` entry: a compute-route variant (e.g. zen's
+    fused-commit megakernel) that must satisfy the SAME wire contract —
+    the expectation is computed from the un-overridden kwargs, so a route
+    that changes a transmitted word fails R2."""
     from repro.core import registry as sreg
     from repro.core import schemes
     kwargs = dict(spec.lint_caps_fn(M, n_level)) if spec.lint_caps_fn else {}
@@ -81,6 +87,8 @@ def _stage_setup(spec, M: int, n_level: int):
     kw = sreg.stage_kwargs(spec, args)
     exp_words = (spec.wire_words_fn(M, n_level, kw)
                  if spec.wire_words_fn else None)
+    if overrides:
+        args = dataclasses.replace(args, **dict(overrides))
     return args, exp_words
 
 
@@ -124,7 +132,7 @@ def _run_and_lower(jfn, g, label: str):
 
 
 def build_flat_subject(
-        scheme: str, n: int, M: int
+        scheme: str, n: int, M: int, route=None
 ) -> Tuple[Optional[Subject], List[Finding]]:
     import jax
     import jax.numpy as jnp
@@ -134,11 +142,15 @@ def build_flat_subject(
     from repro.core import schemes
 
     label = f"{scheme} flat n={n}"
+    overrides = None
+    if route is not None:
+        rlabel, overrides = route
+        label = f"{label} [{rlabel}]"
     spec = sreg.get_scheme(scheme)
     findings = _meta_findings(spec, label)
     if findings:
         return None, findings
-    args, exp_words = _stage_setup(spec, M, n)
+    args, exp_words = _stage_setup(spec, M, n, overrides=overrides)
     sm, smkw = _shard_map()
     mesh = Mesh(np.asarray(jax.devices()[:n]), ("data",))
 
@@ -325,6 +337,23 @@ def run_hlo_sweep(schemes_filter: Optional[List[str]] = None,
                 if kind == "flat" and not spec.feasible(n, M):
                     continue
                 subject, extra = build(scheme, n, M)
+                findings.extend(extra)
+                if subject is None:
+                    continue
+                got = rules.run_rules(subject)
+                findings.extend(got)
+                if verbose:
+                    status = ("ok" if not (got or extra)
+                              else f"{len(got) + len(extra)} finding(s)")
+                    print(f"  {subject.label}: {status}")
+            # compute-route variants (SchemeSpec.lint_routes): same R1-R5
+            # catalog, same wire contract — a fused route that changed a
+            # single transmitted word fails here
+            for route in spec.lint_routes:
+                if not spec.feasible(n, M):
+                    continue
+                subject, extra = build_flat_subject(scheme, n, M,
+                                                    route=route)
                 findings.extend(extra)
                 if subject is None:
                     continue

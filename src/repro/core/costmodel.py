@@ -272,11 +272,17 @@ _registry.register_scheme(
     lint_saturable=True, lint_caps_fn=lambda M, n: {})
 _registry.register_scheme(
     "zen", "zen_sync", zen, lambda n: 2.0 * (n - 1),
-    stage_args=("layout", "use_hash_bitmap", "backend", "interpret", "fused"),
+    stage_args=("layout", "use_hash_bitmap", "backend", "interpret", "fused",
+                "fused_commit"),
     required_args=("layout",), plan_candidate=True,
     wire_words_fn=_wire_zen,
     expected_collectives=("all-to-all", "all-gather"),
-    lint_saturable=False, lint_density=0.25)
+    lint_saturable=False, lint_density=0.25,
+    # the fused-commit megakernel route must satisfy the same R1-R5
+    # invariants with the same wire words (fusing compute may not change
+    # a single transmitted word)
+    lint_routes=(("fused-commit", (("backend", "pallas"), ("fused", True),
+                                   ("fused_commit", True))),))
 _registry.register_scheme(
     "agsparse", "agsparse_sync", agsparse, lambda n: float(n - 1),
     stage_args=("capacity",), required_args=("capacity",),
@@ -503,8 +509,10 @@ def choose_scheme(
         zt = stage_time("zen", p, lvl)
         dt = stage_time("dense", p, lvl)
         if calib is not None:
-            zt += calib.encode_us("zen", p.M * p.vw, p.d(1))
-            dt += calib.encode_us("dense", p.M * p.vw, p.d(1))
+            zt += (calib.encode_us("zen", p.M * p.vw, p.d(1))
+                   + calib.commit_us("zen", p.M * p.vw, p.d(1)))
+            dt += (calib.encode_us("dense", p.M * p.vw, p.d(1))
+                   + calib.commit_us("dense", p.M * p.vw, p.d(1)))
         return "zen" if zt < threshold * dt else "dense"
     if n < 2:
         return "dense"  # single worker: nothing to sync, dense psum is free
@@ -514,8 +522,10 @@ def choose_scheme(
         # overhead; beta > 0 and identity (beta=1, encode=0) preserve the
         # analytic order/threshold exactly.
         b = calib.beta_us_per_word(p.M * p.vw)
-        z = z * b + calib.encode_us("zen", p.M * p.vw, p.d(1))
-        de = de * b + calib.encode_us("dense", p.M * p.vw, p.d(1))
+        z = z * b + (calib.encode_us("zen", p.M * p.vw, p.d(1))
+                     + calib.commit_us("zen", p.M * p.vw, p.d(1)))
+        de = de * b + (calib.encode_us("dense", p.M * p.vw, p.d(1))
+                       + calib.commit_us("dense", p.M * p.vw, p.d(1)))
     return "zen" if z < threshold * de else "dense"
 
 
@@ -544,7 +554,12 @@ def zen_beats_dense(
 # PAPERS.md, arXiv 2505.18563).
 # ---------------------------------------------------------------------------
 
-_CALIB_VERSION = 1
+# v2: commit_us became a DIRECT measurement (a commit-only probe over
+# pre-computed encodes, per-worker share) instead of the v1 clamped
+# residual max(zen_us - n*encode_us, 0), which collapsed to 0 whenever
+# encode timing noise exceeded the commit share.  v1 tables are rejected
+# on load (re-run the calibrator).
+_CALIB_VERSION = 2
 
 # entry keys every table row carries:
 #   backend    "xla" | "pallas"        compute route measured
@@ -552,7 +567,8 @@ _CALIB_VERSION = 1
 #   density    float, d(1) measured at
 #   n          int, sync-axis size of the measurement
 #   encode_us  float, one zen_encode of one worker's payload
-#   commit_us  float, zen push+aggregate+pull share (see CostCalibrator)
+#   commit_us  float, one worker's zen_commit share, measured directly:
+#              simulate(zen_commit) over n pre-encoded workers / n
 #   zen_us     float, full zen_sync end-to-end (n simulated workers)
 #   dense_us   float, dense allreduce end-to-end (same rig)
 
@@ -622,6 +638,20 @@ class CalibrationTable:
         return float(e["encode_us"]) * (max(float(size), 1.0)
                                         / max(e["size"], 1))
 
+    def commit_us(self, scheme: str, size: float, density: float) -> float:
+        """Measured per-worker commit overhead (µs): push + server
+        aggregation + pull decode beyond the wire itself.  Dense commits
+        for free (the psum IS the wire); zen pays the nearest direct
+        commit-probe measurement scaled linearly in size (aggregation and
+        decode work are O(capacity) ⊆ O(M))."""
+        if scheme != "zen":
+            return 0.0
+        e = self._nearest(size, density)
+        if e is None:
+            return 0.0
+        return float(e.get("commit_us", 0.0)) * (max(float(size), 1.0)
+                                                 / max(e["size"], 1))
+
     def beta_us_per_word(self, size: float) -> float:
         """Measured wire rate (µs per FP32 word) from the dense-allreduce
         measurement nearest in size; 1.0 (the analytic unit) when empty."""
@@ -637,14 +667,17 @@ def plan_encode_overhead(
     calib: CalibrationTable, plan: CommPlan, p: SparsityProfile,
     topo: Topology,
 ) -> float:
-    """Measured encode overhead (µs) a CommPlan pays: each non-trivial
-    stage encodes its (merged) payload once before its collectives."""
+    """Measured compute overhead (µs) a CommPlan pays beyond the wire:
+    each non-trivial stage encodes its (merged) payload once before its
+    collectives and pays its per-worker commit (server aggregation + pull
+    decode) once after them."""
     t, k = 0.0, 1
     for stage in plan.stages:
         lvl = topo.levels[stage.level]
         if lvl.size > 1:
             mp = merged_profile(p, k)
-            t += calib.encode_us(stage.scheme, mp.M * mp.vw, mp.d(1))
+            t += (calib.encode_us(stage.scheme, mp.M * mp.vw, mp.d(1))
+                  + calib.commit_us(stage.scheme, mp.M * mp.vw, mp.d(1)))
         k *= lvl.size
     return t
 
@@ -655,12 +688,17 @@ class CostCalibrator:
 
     Per (size, density) point it times, jitted and blocked-until-ready:
       * ``zen_encode`` of one worker's payload       -> encode_us
+      * ``zen_commit`` over n PRE-ENCODED workers    -> commit_us (per
+        worker: measured total / n — on a real mesh each device commits
+        its share concurrently)
       * ``simulate(zen_sync)`` over n workers        -> zen_us
       * ``simulate(dense_sync)`` over n workers      -> dense_us
-    The single-device simulation runs all n encodes serially, so the
-    commit share is ``max(zen_us - n * encode_us, 0)`` — on a real mesh
-    each device encodes once, concurrently.  Imports of jax / schemes are
-    deferred so the cost model stays importable on analysis-only rigs.
+    The commit probe feeds eagerly materialized encodes into a jitted
+    vmap of ``zen_commit`` alone, so commit cost is a direct measurement
+    — not the v1 residual ``max(zen_us - n * encode_us, 0)``, whose clamp
+    hid the commit share whenever encode timing noise exceeded it.
+    Imports of jax / schemes are deferred so the cost model stays
+    importable on analysis-only rigs.
     """
 
     def __init__(self, *, backend: str = "xla", n: int = 4,
@@ -715,6 +753,17 @@ class CostCalibrator:
                     schemes.zen_encode, layout=layout,
                     backend=self.backend))
                 encode_us = self._time_us(enc, g[0])
+                # commit-only probe: encodes are materialized OUTSIDE the
+                # timed function, so the measurement isolates push +
+                # aggregation + pull decode (direct, not a residual)
+                encs = jax.block_until_ready(
+                    jax.jit(jax.vmap(functools.partial(
+                        schemes.zen_encode, layout=layout,
+                        backend=self.backend)))(g))
+                commit_run = jax.jit(jax.vmap(functools.partial(
+                    schemes.zen_commit, axis=schemes.AXIS, layout=layout,
+                    backend=self.backend), axis_name=schemes.AXIS))
+                commit_us = self._time_us(commit_run, encs, g) / self.n
                 zen_run = jax.jit(functools.partial(
                     schemes.simulate, schemes.zen_sync, layout=layout,
                     backend=self.backend))
@@ -728,7 +777,7 @@ class CostCalibrator:
                     "density": density,
                     "n": self.n,
                     "encode_us": encode_us,
-                    "commit_us": max(zen_us - self.n * encode_us, 0.0),
+                    "commit_us": commit_us,
                     "zen_us": zen_us,
                     "dense_us": dense_us,
                 })
@@ -776,7 +825,8 @@ def _main(argv=None) -> None:
         measured = choose_scheme(p, e["n"], calib=table)
         flip = "  <- FLIP" if analytic != measured else ""
         print(f"  size={e['size']:>7} d={e['density']:<5} "
-              f"encode={e['encode_us']:>9.1f}us zen={e['zen_us']:>9.1f}us "
+              f"encode={e['encode_us']:>9.1f}us "
+              f"commit={e['commit_us']:>9.1f}us zen={e['zen_us']:>9.1f}us "
               f"dense={e['dense_us']:>9.1f}us analytic={analytic} "
               f"measured={measured}{flip}")
 

@@ -16,7 +16,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.hashing import EMPTY, compact_indices, hash_mod
+from repro.core.hashing import EMPTY, compact_indices, compact_rows, hash_mod
 
 BITS = 32  # paper assumes FP32 gradients; bitmap sizes are in FP32 words
 
@@ -123,6 +123,28 @@ def bitmap_decode_batch(
     weights = (jnp.uint32(1) << jnp.arange(BITS, dtype=jnp.uint32))
     bits = (words[:, :, None] & weights[None, None, :]) != 0
     return bits.reshape(n, -1)[:, :length]
+
+
+def bitmap_decode_compact(
+    words: jnp.ndarray, length: int, capacity: int, *,
+    backend: str = "xla", interpret: bool | None = None,
+) -> jnp.ndarray:
+    """uint32 [n, W] -> int32 [n, capacity]: each server bitmap decoded
+    straight to its compacted set-bit positions (ascending, EMPTY-padded)
+    — the full zen pull decode in one call.
+
+    ``backend="pallas"`` runs the fused pull megakernel
+    (``kernels/zen_commit.py``: unpack + compact in one dispatch, one VMEM
+    pass per server row); "xla" composes :func:`bitmap_decode_batch` +
+    ``compact_rows`` — the two routes are bit-identical (CI kernel-parity
+    matrix)."""
+    if backend == "pallas":
+        from repro.kernels import ops  # deferred: kernels import this module
+
+        return ops.zen_commit_pull_fused_op(words, length, capacity,
+                                            interpret=interpret)
+    m = bitmap_decode_batch(words, length)
+    return compact_rows(m, capacity)[0]
 
 
 def bitmap_wire_bytes(length: int) -> int:

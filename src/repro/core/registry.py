@@ -59,6 +59,7 @@ class StageArgs:
     backend: str = "xla"              # zen compute route: "xla" | "pallas"
     interpret: bool | None = None     # pallas interpret override (zen)
     fused: bool | None = None         # zen fused-encode megakernel toggle
+    fused_commit: bool | None = None  # zen fused-commit megakernel toggle
 
     def set_fields(self) -> tuple[str, ...]:
         """Names of fields set to a non-default value."""
@@ -108,6 +109,11 @@ class SchemeSpec:
     # scheme at that payload (schemes taking a layout build it in-driver)
     lint_caps_fn: Callable | None = None
     lint_exempt: tuple[str, ...] = ()         # waived rule ids, e.g. ("R5",)
+    # extra compute-route variants the lint sweep must also certify:
+    # ((label, ((StageArgs field, value), ...)), ...).  Each route re-runs
+    # the flat R1-R5 sweep with those fields overridden — e.g. zen's
+    # fused-commit megakernel route, which must not change a wire word.
+    lint_routes: tuple = ()
 
     @property
     def executable(self) -> bool:
@@ -155,6 +161,7 @@ def register_scheme(
     lint_density: float = 1.0,
     lint_caps_fn: Callable | None = None,
     lint_exempt: tuple[str, ...] = (),
+    lint_routes: tuple = (),
 ) -> SchemeSpec:
     """Register one scheme.  Re-registering a name replaces it (tests)."""
     valid = {f.name for f in dataclasses.fields(StageArgs)}
@@ -172,7 +179,8 @@ def register_scheme(
         wire_words_fn=wire_words_fn,
         expected_collectives=tuple(expected_collectives),
         lint_saturable=lint_saturable, lint_density=lint_density,
-        lint_caps_fn=lint_caps_fn, lint_exempt=tuple(lint_exempt))
+        lint_caps_fn=lint_caps_fn, lint_exempt=tuple(lint_exempt),
+        lint_routes=tuple(lint_routes))
     _REGISTRY[name] = spec
     return spec
 

@@ -120,6 +120,36 @@ def _scatter_add(
     return out.at[tgt].add(vals, mode="drop")
 
 
+def _scatter_unique(
+    out: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray
+) -> jnp.ndarray:
+    """Collision-free scatter for provably disjoint targets (Thm. 2).
+
+    Zen's pull decode recovers ``perm[offsets[p] + local_pos]`` — servers
+    own non-overlapping index ranges (``offsets`` partitions ``[0, M)``)
+    and positions within a range are unique, so no two live updates share
+    a target.  ``.at[].set`` then equals add-into-zeros value-for-value
+    (0 + v == v; only the sign of a -0.0 value could differ, which the
+    wire contract treats as equal) while telling XLA the scatter needs no
+    combiner."""
+    tgt = jnp.where(idx == EMPTY, out.shape[0], idx)
+    return out.at[tgt].set(vals, mode="drop")
+
+
+def _coo_reduce(
+    out: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray,
+    *, backend: str = "xla", interpret: bool | None = None,
+) -> jnp.ndarray:
+    """The one batched segment-reduce every scheme's server aggregation
+    uses: out [M(, d)] += vals at row idx, EMPTY / out-of-range dropped.
+    Thin shim over ``kernels.ops.batched_coo_reduce_op`` (which owns the
+    flatten + backend dispatch); idx/vals may carry any leading shape."""
+    from repro.kernels import ops as kops  # deferred: kernels import core
+
+    return kops.batched_coo_reduce_op(out, idx, vals, backend=backend,
+                                      interpret=interpret)
+
+
 # ---------------------------------------------------------------------------
 # Dense baseline
 # ---------------------------------------------------------------------------
@@ -143,9 +173,7 @@ def agsparse_sync(
     coo = formats.coo_encode(dense, capacity)
     all_idx = lax.all_gather(coo.indices, axis)   # [n, C]
     all_val = lax.all_gather(coo.values, axis)    # [n, C(, d)]
-    out = jnp.zeros_like(dense)
-    out = _scatter_add(out, all_idx.reshape(-1),
-                       all_val.reshape(-1, *dense.shape[1:]))
+    out = _coo_reduce(jnp.zeros_like(dense), all_idx, all_val)
     n = _axis_size(axis)
     sent = (n - 1) * _nnz(coo.indices) * (1 + _vwidth(dense))
     return out, SyncStats(sent_words=sent, overflow=coo.overflow)
@@ -215,18 +243,15 @@ def sparse_ps_sync(
     got_idx = lax.all_to_all(coo.indices, axis, split_axis=0, concat_axis=0)
     got_val = lax.all_to_all(coo.values, axis, split_axis=0, concat_axis=0)
     # --- Server aggregation --------------------------------------------------
-    buf = jnp.zeros((shard, *dense.shape[1:]), dense.dtype)
-    buf = _scatter_add(buf, got_idx.reshape(-1),
-                       got_val.reshape(-1, *dense.shape[1:]))
+    buf = _coo_reduce(jnp.zeros((shard, *dense.shape[1:]), dense.dtype),
+                      got_idx, got_val)
     # --- Pull: COO of the aggregated shard, all_gather -----------------------
     pull = formats.coo_encode(buf, cap_pull)
     all_idx = lax.all_gather(pull.indices, axis)  # [n, cap_pull]
     all_val = lax.all_gather(pull.values, axis)
     rank_off = (jnp.arange(n, dtype=jnp.int32) * shard)[:, None]
     glob = jnp.where(all_idx == EMPTY, EMPTY, all_idx + rank_off)
-    out = jnp.zeros_like(dense)
-    out = _scatter_add(out, glob.reshape(-1),
-                       all_val.reshape(-1, *dense.shape[1:]))
+    out = _coo_reduce(jnp.zeros_like(dense), glob, all_val)
     sent = (jnp.sum(jax.vmap(_nnz)(coo.indices)) - _nnz(coo.indices[lax.axis_index(axis)])
             + (n - 1) * _nnz(pull.indices)) * (1 + vw)
     overflow = jnp.sum(coo.overflow) + pull.overflow
@@ -353,18 +378,14 @@ def balanced_sync(
     got_val = lax.all_to_all(pval, axis, split_axis=0, concat_axis=0)
 
     # --- server aggregation over the full index space (global indices) -------
-    buf = jnp.zeros_like(dense)
-    buf = _scatter_add(buf, got_idx.reshape(-1),
-                       got_val.reshape(-1, *dense.shape[1:]))
+    buf = _coo_reduce(jnp.zeros_like(dense), got_idx, got_val)
 
     # --- pull: compact the aggregated range, allgather the reduced shards ----
     pull_idx, ov_p = compact_indices(_mask(buf), cap_pull)
     pull_val = _gather_rows(buf, pull_idx)
     all_idx = lax.all_gather(pull_idx, axis)              # [n, cap_pull]
     all_val = lax.all_gather(pull_val, axis)
-    out = jnp.zeros_like(dense)
-    out = _scatter_add(out, all_idx.reshape(-1),
-                       all_val.reshape(-1, *dense.shape[1:]))
+    out = _coo_reduce(jnp.zeros_like(dense), all_idx, all_val)
 
     nnz_per_dest = jnp.sum(pidx != EMPTY, axis=1).astype(jnp.float32)
     push_sent = (jnp.sum(nnz_per_dest) - nnz_per_dest[my_rank]) * (1 + vw)
@@ -473,24 +494,6 @@ def make_zen_layout(
     )
 
 
-def _backend_scatter_add(
-    out: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray,
-    *, backend: str, interpret: bool,
-) -> jnp.ndarray:
-    """out [M(, d)] += vals [C(, d)] at row idx [C]; EMPTY / out-of-range
-    dropped.  Pallas backend routes through the sequential-grid RMW kernel
-    (kernels/scatter_add.py); value vectors are widened to 2-D for it."""
-    if backend != "pallas":
-        return _scatter_add(out, idx, vals)
-    from repro.kernels import ops as kops  # deferred: kernels import core
-
-    squeeze = out.ndim == 1
-    out2 = out[:, None] if squeeze else out
-    vals2 = vals[:, None] if squeeze else vals
-    res = kops.coo_scatter_add_op(out2, idx, vals2, interpret=interpret)
-    return res[:, 0] if squeeze else res
-
-
 class ZenEncoded(NamedTuple):
     """Output of ``zen_encode`` — everything the push collective needs."""
 
@@ -549,7 +552,7 @@ def zen_encode(
 def zen_commit(
     enc: ZenEncoded, dense: jnp.ndarray, *, axis: str, layout: ZenLayout,
     use_hash_bitmap: bool = True, backend: str = "xla",
-    interpret: bool | None = None,
+    interpret: bool | None = None, fused: bool | None = None,
 ) -> tuple[jnp.ndarray, SyncStats]:
     """Zen stages 2-4: push all_to_all, server aggregation, bitmap pull.
 
@@ -562,11 +565,20 @@ def zen_commit(
     pair, which is how a plan's pull ends up on a different axis than an
     earlier stage's push — there is no valid cross-axis pull *within*
     one zen instance (another axis names a different worker set, whose
-    servers hold different partitions)."""
+    servers hold different partitions).
+
+    ``fused`` (pallas backend only; default on) routes the server-side
+    work through the commit megakernel pair (``kernels/zen_commit.py``,
+    DESIGN.md §14): aggregation + mask/compact + value gather + bitmap
+    pack in one push dispatch, and the batched pull decode (unpack +
+    compact_rows) in one pull dispatch.  Wire words and every transmitted
+    payload are bit-identical to the unfused chain (zenlint R2 sweeps the
+    fused route)."""
     lo = layout
     n = lo.n
     vw = _vwidth(dense)
     interpret = _resolve_backend(backend, interpret)
+    fuse = backend == "pallas" and (fused is None or fused)
     tabs = lo.device_tables()
     pidx, pval = enc.pidx, enc.pval
 
@@ -574,31 +586,43 @@ def zen_commit(
     got_idx = lax.all_to_all(pidx, axis, split_axis=0, concat_axis=0)
     got_val = lax.all_to_all(pval, axis, split_axis=0, concat_axis=0)
 
-    # --- 3. server-side aggregation into the compact partition buffer --------
+    # --- 3+4a. server aggregation + pull-payload build -----------------------
     flat_idx = got_idx.reshape(-1)
     lp = jnp.where(flat_idx == EMPTY, lo.cap_server,
                    tabs.local_pos[jnp.where(flat_idx == EMPTY, 0, flat_idx)])
-    buf = jnp.zeros((lo.cap_server, *dense.shape[1:]), dense.dtype)
-    buf = _backend_scatter_add(
-        buf, lp, got_val.reshape(-1, *dense.shape[1:]),
-        backend=backend, interpret=interpret)
-
-    # --- 4. Pull --------------------------------------------------------------
-    srv_mask = _mask(buf)
+    got_v = got_val.reshape(-1, *dense.shape[1:])
     cap_pull = lo.r1 + lo.r2  # aggregated nnz per server <= sum of pushes
-    lpos, ov_p = compact_indices(srv_mask, cap_pull)
-    vals = _gather_rows(buf, lpos)
+    if fuse:
+        from repro.kernels import ops as kops  # deferred: kernels import core
 
+        lpos, vals, bm, ov_p = kops.zen_commit_push_fused_op(
+            lp, got_v, cap_server=lo.cap_server, cap_pull=cap_pull,
+            interpret=interpret)
+    else:
+        buf = _coo_reduce(
+            jnp.zeros((lo.cap_server, *dense.shape[1:]), dense.dtype),
+            lp, got_v, backend=backend, interpret=interpret)
+        srv_mask = _mask(buf)
+        lpos, ov_p = compact_indices(srv_mask, cap_pull)
+        vals = _gather_rows(buf, lpos)
+
+    # --- 4b. Pull -------------------------------------------------------------
     if use_hash_bitmap:
-        bm = formats.bitmap_encode(srv_mask, backend=backend,
-                                   interpret=interpret)  # [cap_bitmap_words]
+        if not fuse:
+            bm = formats.bitmap_encode(srv_mask, backend=backend,
+                                       interpret=interpret)
         all_bm = lax.all_gather(bm, axis)                 # [n, W]
         all_val = lax.all_gather(vals, axis)              # [n, cap_pull(,d)]
         # fused decode: one batched unpack + compaction + permutation gather
         # (replaces the per-server vmapped closure)
-        m_all = formats.bitmap_decode_batch(
-            all_bm, lo.cap_server, backend=backend, interpret=interpret)
-        lpos_all, _ = compact_rows(m_all, cap_pull)       # [n, cap_pull]
+        if fuse:
+            lpos_all = formats.bitmap_decode_compact(
+                all_bm, lo.cap_server, cap_pull, backend="pallas",
+                interpret=interpret)
+        else:
+            m_all = formats.bitmap_decode_batch(
+                all_bm, lo.cap_server, backend=backend, interpret=interpret)
+            lpos_all, _ = compact_rows(m_all, cap_pull)   # [n, cap_pull]
         gidx = jnp.clip(tabs.offsets[:n, None] + lpos_all, 0, lo.length - 1)
         glob = jnp.where(lpos_all == EMPTY, EMPTY, tabs.perm[gidx])
         pull_words = (n - 1) * (_nnz(lpos) * vw + lo.cap_bitmap_words)
@@ -613,10 +637,10 @@ def zen_commit(
 
     # final decode-apply stays in XLA on both backends: its output is the
     # full-length gradient, too large for the VMEM-resident scatter kernel
-    # (which is sized for the compact server buffer).
-    out = jnp.zeros_like(dense)
-    out = _scatter_add(out, glob.reshape(-1),
-                       all_val.reshape(-1, *dense.shape[1:]))
+    # (which is sized for the compact server buffer).  Thm. 2 makes the
+    # decoded targets globally unique, so it needs no combiner.
+    out = _scatter_unique(jnp.zeros_like(dense), glob.reshape(-1),
+                          all_val.reshape(-1, *dense.shape[1:]))
 
     my_rank = lax.axis_index(axis)
     push_sent = (jnp.sum(jax.vmap(_nnz)(pidx)) - _nnz(pidx[my_rank])) * (1 + vw)
@@ -631,6 +655,7 @@ def zen_sync(
     dense: jnp.ndarray, *, axis: str, layout: ZenLayout,
     use_hash_bitmap: bool = True, backend: str = "xla",
     interpret: bool | None = None, fused: bool | None = None,
+    fused_commit: bool | None = None,
 ) -> tuple[jnp.ndarray, SyncStats]:
     """Zen synchronization: Alg. 1 push + Alg. 2 (hash bitmap) pull.
 
@@ -658,7 +683,7 @@ def zen_sync(
                      interpret=interpret, fused=fused)
     return zen_commit(enc, dense, axis=axis, layout=layout,
                       use_hash_bitmap=use_hash_bitmap, backend=backend,
-                      interpret=interpret)
+                      interpret=interpret, fused=fused_commit)
 
 
 # ---------------------------------------------------------------------------
@@ -723,7 +748,7 @@ def stage_args_for(
     scheme: str, *, rows: int, budget: float,
     layout: ZenLayout | None = None, use_hash_bitmap: bool = True,
     backend: str = "xla", interpret: bool | None = None,
-    fused: bool | None = None,
+    fused: bool | None = None, fused_commit: bool | None = None,
 ) -> StageArgs:
     """Provision one stage's :class:`StageArgs` from a density budget —
     the single place capacity sizing lives (GradSync, ``simulate_hier``
@@ -736,7 +761,8 @@ def stage_args_for(
         return StageArgs()
     if scheme == "zen":
         return StageArgs(layout=layout, use_hash_bitmap=use_hash_bitmap,
-                         backend=backend, interpret=interpret, fused=fused)
+                         backend=backend, interpret=interpret, fused=fused,
+                         fused_commit=fused_commit)
     if scheme == "omnireduce":
         blk = 8
         nb = max(8, cap // blk)
@@ -750,7 +776,8 @@ def plan_stage_args(
     plan, topology, rows: int, *, density_budget: float, key: int = 0,
     k: int = 3, r1_factor: float = 2.0, r2_ratio: float = 0.1,
     backend: str = "xla", use_hash_bitmap: bool = True,
-    fused: bool | None = None, interpret: bool | None = None,
+    fused: bool | None = None, fused_commit: bool | None = None,
+    interpret: bool | None = None,
 ) -> dict[int, StageArgs]:
     """Provision every stage of a CommPlan: {level -> StageArgs}, with
     size-1 levels skipped (free identity — ``hier_sync`` never
@@ -773,7 +800,7 @@ def plan_stage_args(
         args = stage_args_for(
             stage.scheme, rows=rows, budget=b, layout=layout,
             use_hash_bitmap=use_hash_bitmap, backend=backend,
-            interpret=interpret, fused=fused)
+            interpret=interpret, fused=fused, fused_commit=fused_commit)
         sreg.validate_stage_args(
             sreg.get_scheme(stage.scheme), args,
             where=f"plan stage {stage.scheme}@level{stage.level}")

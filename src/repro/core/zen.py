@@ -70,6 +70,11 @@ class SyncConfig:
     # megakernel (kernels/zen_encode.py, DESIGN.md §11) instead of the
     # 3-dispatch hash/extract/pack chain.  Both are bit-exact vs XLA.
     fused_encode: bool = True
+    # Pallas backend only: route the commit path (server aggregation +
+    # compaction + bitmap pack, and the batched pull decode) through the
+    # commit megakernel pair (kernels/zen_commit.py, DESIGN.md §14).
+    # Wire-exact vs the unfused chain (zenlint's fused-commit route).
+    fused_commit: bool = True
     # Path to a CostCalibrator JSON table (DESIGN.md §11).  When set, the
     # 'auto' scheme decision adds *measured* per-stage encode overhead —
     # zen is only picked when its wire win survives what encode actually
@@ -304,7 +309,7 @@ class GradSync:
             scheme, rows=rows, budget=self._level_budget(capd, level),
             layout=self._layouts.get((bucket.key, level)),
             use_hash_bitmap=cfg.use_hash_bitmap, backend=cfg.backend,
-            fused=cfg.fused_encode)
+            fused=cfg.fused_encode, fused_commit=cfg.fused_commit)
 
     def _encode_bucket(self, bucket: bk.Bucket, payload: jnp.ndarray):
         """Local, collective-free stage (overlappable with the previous
@@ -336,7 +341,7 @@ class GradSync:
                 enc, g, axis=lvl.axis,
                 layout=self._layouts[bucket.key, level],
                 use_hash_bitmap=self.cfg.use_hash_bitmap,
-                backend=self.cfg.backend)
+                backend=self.cfg.backend, fused=self.cfg.fused_commit)
         args = self._stage_args(bucket, stage.scheme, level)
         return schemes.stage_sync(stage.scheme, g, axis=lvl.axis,
                                   n=lvl.size, stage_args=args)

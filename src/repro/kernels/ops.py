@@ -17,6 +17,7 @@ from repro.kernels import bitmap as _bm
 from repro.kernels import compact as _cp
 from repro.kernels import hash_stage as _hs
 from repro.kernels import scatter_add as _sa
+from repro.kernels import zen_commit as _zc
 from repro.kernels import zen_encode as _ze
 
 LANES = _hs.LANES
@@ -87,6 +88,32 @@ def coo_scatter_add_op(out: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray,
     idxp = jnp.pad(idx, (0, pad), constant_values=EMPTY)
     valsp = jnp.pad(vals, ((0, pad), (0, 0)))
     return _sa.coo_scatter_add(out, idxp, valsp, interpret=interpret)
+
+
+def batched_coo_reduce_op(out: jnp.ndarray, idx: jnp.ndarray,
+                          vals: jnp.ndarray, *, backend: str = "xla",
+                          interpret: bool | None = None):
+    """One batched segment-reduce for every scheme's server aggregation:
+    per-peer COO segments ``idx [n, C]`` / ``vals [n, C(, d)]`` (or
+    already-flat) scatter-added into a dense accumulator ``out [M(, d)]``.
+    EMPTY and out-of-range indices are dropped.
+
+    This is the shared aggregation primitive of agsparse / sparse_ps /
+    balanced / zen (``core/schemes.py`` routes all of them through it).
+    ``backend="xla"`` is the flattened ``.at[].add`` every scheme used
+    before the hoist — bit-identical updates in identical order;
+    ``backend="pallas"`` routes through the sequential-grid RMW kernel
+    (kernels/scatter_add.py), widening 1-D values to 2-D for it."""
+    idx = idx.reshape(-1)
+    vals = vals.reshape(idx.shape[0], *out.shape[1:])
+    if backend != "pallas":
+        tgt = jnp.where(idx == EMPTY, out.shape[0], idx)
+        return out.at[tgt].add(vals, mode="drop")
+    squeeze = out.ndim == 1
+    out2 = out[:, None] if squeeze else out
+    vals2 = vals[:, None] if squeeze else vals
+    res = coo_scatter_add_op(out2, idx, vals2, interpret=interpret)
+    return res[:, 0] if squeeze else res
 
 
 def bitmap_pack_rows_op(mask: jnp.ndarray, *, interpret: bool | None = None):
@@ -220,6 +247,138 @@ def zen_encode_fused_op(indices: jnp.ndarray, seeds, n: int, r1: int,
     W = -(-L // BITS)
     # nnz per row <= L, so the dropped tail words/columns are all-zero/EMPTY
     return pidx[:, :L], occ[:, :W], jnp.sum(ovf)
+
+
+@functools.partial(jax.jit, static_argnames=("cap_server", "cap_pull"))
+def _zen_commit_push_fused_xla(lp: jnp.ndarray, vals: jnp.ndarray,
+                               cap_server: int, cap_pull: int):
+    """Single-dispatch XLA composition of the fused commit push —
+    aggregation, mask/compaction, value gather and bitmap pack in ONE
+    executable.  The scatter-add is the identical flattened ``.at[].add``
+    the unfused route lowers (same updates, same order — bitwise equal by
+    construction), compaction is ``compact_indices`` and the pack is the
+    ``formats.bitmap_encode`` weight-sum, so every word matches the
+    3-dispatch chain."""
+    from repro.core.hashing import compact_indices
+
+    buf = jnp.zeros((cap_server, vals.shape[-1]), vals.dtype)
+    buf = buf.at[lp].add(vals, mode="drop")
+    mask = jnp.any(buf != 0, axis=-1)
+    lpos, overflow = compact_indices(mask, cap_pull)
+    safe = jnp.where(lpos == EMPTY, 0, lpos)
+    out = jnp.where((lpos == EMPTY)[:, None], 0, buf[safe])
+    pad = (-cap_server) % BITS
+    bits = jnp.pad(mask.astype(jnp.uint32), (0, pad)).reshape(-1, BITS)
+    weights = jnp.uint32(1) << jnp.arange(BITS, dtype=jnp.uint32)
+    bm = jnp.sum(bits * weights, axis=1, dtype=jnp.uint32)
+    return lpos, out, bm, overflow
+
+
+def zen_commit_push_fused_op(lp: jnp.ndarray, vals: jnp.ndarray, *,
+                             cap_server: int, cap_pull: int,
+                             interpret: bool | None = None,
+                             force_kernel: bool = False):
+    """Fused Zen commit push: ONE dispatch for server aggregation + mask
+    compaction + value gather + bitmap pack (DESIGN.md §14).
+
+    lp int32 [C] server-local positions (EMPTY / >= cap_server dropped),
+    vals [C(, d)] pushed values -> (lpos int32 [cap_pull], vals
+    [cap_pull(, d)], bm uint32 [ceil(cap_server/32)], overflow scalar).
+    Bit-exact vs ``zen_commit_push_unfused`` (the 3-dispatch chain) and
+    ``ref.zen_commit_push_ref`` — the CI kernel-parity matrix enforces it.
+
+    Dispatch mirrors ``zen_encode_fused_op``: the Pallas megakernel
+    (kernels/zen_commit.py) on TPU, the equivalent single-dispatch XLA
+    composition off-TPU (interpret-mode hit matrices are real XLA work
+    that exists only to vectorize the VPU), ``force_kernel=True`` for the
+    interpret-mode megakernel (the parity tests' middle oracle)."""
+    interpret = _resolve(interpret)
+    squeeze = vals.ndim == 1
+    vals2 = vals[:, None] if squeeze else vals
+    if interpret and not force_kernel:
+        lpos, v, bm, ov = _zen_commit_push_fused_xla(
+            lp, vals2, cap_server, cap_pull)
+    else:
+        C = lp.shape[0]
+        pad = (-C) % _zc.BLOCK_C
+        lpp = jnp.pad(lp, (0, pad), constant_values=EMPTY)
+        vp = jnp.pad(vals2, ((0, pad), (0, 0)))
+        lpos, v, bm, ov = _zc.zen_commit_push_fused(
+            lpp[None, :], vp, cap_server=cap_server, cap_pull=cap_pull,
+            interpret=interpret)
+        W = -(-cap_server // BITS)
+        lpos, v = lpos[0, :cap_pull], v[:cap_pull]
+        bm, ov = bm[0, :W], ov[0, 0]
+    return lpos, (v[:, 0] if squeeze else v), bm, ov
+
+
+def zen_commit_push_unfused(lp: jnp.ndarray, vals: jnp.ndarray, *,
+                            cap_server: int, cap_pull: int,
+                            interpret: bool | None = None):
+    """The pre-fusion commit-push dispatch chain: scatter-add kernel + XLA
+    compaction/gather + bitmap-pack kernel.  Kept as the fused
+    megakernel's oracle and the benchmark baseline
+    (benchmarks/micro_sync.py ``commit_fused`` series)."""
+    from repro.core.hashing import compact_indices
+
+    squeeze = vals.ndim == 1
+    vals2 = vals[:, None] if squeeze else vals
+    buf = coo_scatter_add_op(
+        jnp.zeros((cap_server, vals2.shape[-1]), vals2.dtype), lp, vals2,
+        interpret=interpret)
+    mask = jnp.any(buf != 0, axis=-1)
+    lpos, overflow = compact_indices(mask, cap_pull)
+    safe = jnp.where(lpos == EMPTY, 0, lpos)
+    out = jnp.where((lpos == EMPTY)[:, None], 0, buf[safe])
+    bm = bitmap_pack_op(mask, interpret=interpret)
+    return lpos, (out[:, 0] if squeeze else out), bm, overflow
+
+
+@functools.partial(jax.jit, static_argnames=("cap_server", "cap_pull"))
+def _zen_commit_pull_fused_xla(words: jnp.ndarray, cap_server: int,
+                               cap_pull: int):
+    """Single-dispatch XLA composition of the fused pull decode: batched
+    bitmap unpack + row compaction (the ``bitmap_decode_batch`` +
+    ``compact_rows`` formulations, in one executable)."""
+    from repro.core.hashing import compact_rows
+
+    weights = jnp.uint32(1) << jnp.arange(BITS, dtype=jnp.uint32)
+    bits = (words[:, :, None] & weights[None, None, :]) != 0
+    m = bits.reshape(words.shape[0], -1)[:, :cap_server]
+    return compact_rows(m, cap_pull)[0]
+
+
+def zen_commit_pull_fused_op(words: jnp.ndarray, cap_server: int,
+                             cap_pull: int, *,
+                             interpret: bool | None = None,
+                             force_kernel: bool = False):
+    """Fused Zen pull decode: every gathered server bitmap unpacked and
+    compacted in one dispatch.  words uint32 [n, W] -> lpos int32
+    [n, cap_pull] (set-bit positions below ``cap_server``, ascending,
+    EMPTY-padded).  Dispatch as ``zen_commit_push_fused_op``."""
+    interpret = _resolve(interpret)
+    if interpret and not force_kernel:
+        return _zen_commit_pull_fused_xla(words, cap_server, cap_pull)
+    n, W = words.shape
+    padW = (-W) % (LANES // BITS)  # pad so each row spans whole lanes
+    wp = jnp.pad(words, ((0, 0), (0, padW)))
+    lpos = _zc.zen_commit_pull_fused(
+        wp, cap_server=cap_server, cap_pull=cap_pull, interpret=interpret)
+    return lpos[:, :cap_pull]
+
+
+def zen_commit_pull_unfused(words: jnp.ndarray, cap_server: int,
+                            cap_pull: int, *,
+                            interpret: bool | None = None):
+    """The pre-fusion pull decode: bitmap-unpack kernel + XLA row
+    compaction (the fused pull kernel's oracle and bench baseline)."""
+    from repro.core.hashing import compact_rows
+
+    n, W = words.shape
+    bits = bitmap_unpack_op(words.reshape(-1), n * W * BITS,
+                            interpret=interpret)
+    m = bits.reshape(n, W * BITS)[:, :cap_server]
+    return compact_rows(m, cap_pull)[0]
 
 
 def zen_encode_unfused(indices: jnp.ndarray, seeds, n: int, r1: int,

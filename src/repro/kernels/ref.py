@@ -76,6 +76,38 @@ def zen_encode_ref(indices: jnp.ndarray, seeds, n: int, r1: int, r2: int):
     return pidx, occ, part.overflow
 
 
+def zen_commit_push_ref(lp: jnp.ndarray, vals: jnp.ndarray,
+                        cap_server: int, cap_pull: int):
+    """Pure-jnp oracle for the fused commit push (kernels/zen_commit.py):
+    scatter-add aggregation + mask compaction + value gather + LSB-first
+    bitmap pack.  lp int32 [C] (>= cap_server dropped), vals [C(, d)] ->
+    (lpos [cap_pull], vals [cap_pull(, d)], bm uint32 [ceil(cap_server/32)],
+    overflow)."""
+    from repro.core.hashing import compact_indices  # deferred: cycle
+
+    squeeze = vals.ndim == 1
+    v2 = vals[:, None] if squeeze else vals
+    buf = coo_scatter_add_ref(cap_server, lp, v2)
+    mask = jnp.any(buf != 0, axis=-1)
+    lpos, overflow = compact_indices(mask, cap_pull)
+    safe = jnp.where(lpos == EMPTY, 0, lpos)
+    out = jnp.where((lpos == EMPTY)[:, None], 0, buf[safe])
+    W = -(-cap_server // BITS)
+    bits = jnp.pad(mask.astype(jnp.int32), (0, W * BITS - cap_server))
+    bm = bitmap_pack_ref(bits)
+    return lpos, (out[:, 0] if squeeze else out), bm, overflow
+
+
+def zen_commit_pull_ref(words: jnp.ndarray, cap_server: int,
+                        cap_pull: int) -> jnp.ndarray:
+    """Pure-jnp oracle for the fused pull decode: per-row bitmap unpack +
+    compaction.  words uint32 [n, W] -> lpos int32 [n, cap_pull]."""
+    from repro.core.hashing import compact_rows  # deferred: cycle
+
+    bits = jnp.stack([bitmap_unpack_ref(w) for w in words])
+    return compact_rows(bits[:, :cap_server].astype(bool), cap_pull)[0]
+
+
 def row_compact_argsort_ref(mem: jnp.ndarray) -> jnp.ndarray:
     """The pre-fast-path compaction (stable per-row argsort).  EMPTY is int32
     max, so sorting moves it to the back — but it also sorts the live values

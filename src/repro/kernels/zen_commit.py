@@ -1,0 +1,180 @@
+"""Pallas-TPU megakernels: the fused Zen commit path (DESIGN.md §14).
+
+The commit-side counterpart of ``zen_encode.py``'s encode megakernel.
+Two kernels cover the server work of ``schemes.zen_commit``:
+
+* **push fuse** — server aggregation (``scatter_add.py``), non-zero
+  mask + compaction (``compact_indices``) and occupancy-bitmap packing
+  (``bitmap.py``) become ONE kernel: the pushed (position, value) pairs
+  enter VMEM once and the wire-format pull payload (compacted server
+  positions, their values, the packed server bitmap, the pull overflow
+  count) leaves once.  The 3-dispatch route materializes the
+  ``[cap_server, d]`` aggregation buffer to HBM between every stage;
+  here it never leaves VMEM.
+
+* **pull fuse** — the batched decode of every server's gathered bitmap
+  (``bitmap_unpack`` + ``compact_rows``) becomes one kernel with grid
+  ``(n,)``: one step per server row, each unpacking its words and
+  compacting the set-bit positions in a single VMEM pass.  The
+  permutation gather and the final full-length apply stay in XLA — their
+  output is the whole gradient, too large for a VMEM-resident kernel.
+
+Bit-exactness contract: per aggregation slot each worker contributes at
+most one update (indices are unique within a worker's partition row), and
+the kernel accumulates update blocks sequentially — the same per-slot add
+order as XLA's flattened scatter-add.  Mask, compaction (ascending, the
+``compact_indices`` order), value gather (one-hot selection, exact) and
+bitmap words (LSB-first shifts — never a matmul, whose f32 accumulation
+cannot represent the high bit weights) all match the XLA formulations
+word for word.  The 3-deep oracle hierarchy (fused → interpret-mode
+kernel → XLA composition / unfused chain) is CI-gated in
+tests/test_zen_commit_fused.py.
+
+VMEM envelope: the push kernel's selection matrices are [BLOCK_C, Csp]
+and [Csp, Lp] (+value width), the pull kernel's [Wp*32, Lp] — sized by
+the compact server buffer, not the gradient, so they stay in the same
+~(2|I|/n)² regime as the encode megakernel.  For much larger server
+buffers, tile the compaction over Csp blocks (the cumsum is associative)
+before running un-interpreted on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import EMPTY
+
+LANES = 128
+BITS = 32
+BLOCK_C = 256  # update rows accumulated per sequential block
+
+
+def _push_kernel(lp_ref, val_ref, lpos_ref, vals_ref, occ_ref, ovf_ref, *,
+                 cap_server: int, cap_pull: int):
+    lp = lp_ref[...]                                      # [1, Cp] int32
+    val = val_ref[...]                                    # [Cp, D]
+    Cp = lp.shape[1]
+    Csp = occ_ref.shape[1] * BITS                         # padded server rows
+    scol = jax.lax.broadcasted_iota(jnp.int32, (1, Csp), 1)[0]  # [Csp]
+
+    # --- server aggregation: sequential block accumulation ----------------
+    # Each worker holds at most one update per slot, so accumulating the
+    # update stream in blocks applies per-slot adds in stream order — the
+    # same order XLA's scatter-add applies duplicate indices.  Positions
+    # >= cap_server (the EMPTY sentinel and the pad) are dropped.
+    buf = jnp.zeros((Csp, val.shape[1]), val.dtype)
+    for c0 in range(0, Cp, BLOCK_C):
+        lpb = lp[0, c0:c0 + BLOCK_C]                      # [B]
+        valb = val[c0:c0 + BLOCK_C]                       # [B, D]
+        hit = (lpb[:, None] == scol[None, :]) \
+            & (lpb < cap_server)[:, None]                 # [B, Csp]
+        buf = buf + jnp.sum(
+            jnp.where(hit[:, :, None], valb[:, None, :], 0), axis=0)
+
+    # --- mask + compaction (compact_indices formulation, ascending) -------
+    mask = jnp.any(buf != 0, axis=-1)                     # [Csp]; pad rows 0
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    nnz = jnp.sum(mask.astype(jnp.int32))
+    Lp = lpos_ref.shape[1]
+    jcol = jax.lax.broadcasted_iota(jnp.int32, (Csp, Lp), 1)
+    srow = jax.lax.broadcasted_iota(jnp.int32, (Csp, Lp), 0)
+    hit2 = mask[:, None] & (pos[:, None] == jcol)         # [Csp, Lp]
+    comp = jnp.sum(jnp.where(hit2, srow, 0), axis=0)      # [Lp]
+    kept = jnp.minimum(nnz, cap_pull)
+    lane_j = jax.lax.broadcasted_iota(jnp.int32, (1, Lp), 1)
+    lpos_ref[...] = jnp.where(lane_j < kept, comp[None, :], EMPTY)
+    # one-hot value gather: exact (each column selects at most one row)
+    vals_ref[...] = jnp.sum(
+        jnp.where(hit2[:, :, None], buf[:, None, :], 0), axis=0)
+    ovf_ref[...] = jnp.maximum(nnz - cap_pull, 0).reshape(1, 1)
+
+    # --- occupancy bitmap of the SERVER mask (not a prefix: pull decoders
+    # re-derive positions from it) — LSB-first shift pack ------------------
+    Wp = occ_ref.shape[1]
+    bits = mask.astype(jnp.uint32).reshape(Wp, BITS)
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (Wp, BITS), 1)
+    occ_ref[...] = jnp.sum(bits << lane, axis=1, dtype=jnp.uint32)[None, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap_server", "cap_pull", "interpret"))
+def zen_commit_push_fused(lp: jnp.ndarray, vals: jnp.ndarray, *,
+                          cap_server: int, cap_pull: int,
+                          interpret: bool = True):
+    """lp int32 [1, Cp] (Cp a BLOCK_C multiple; entries >= cap_server are
+    dropped), vals [Cp, d] -> (lpos [1, Lp], vals [Lp, d], occ uint32
+    [1, Wp], ovf [1, 1]) with Lp = cap_pull rounded up to LANES and
+    Wp = ceil(cap_server / 32) rounded up so Wp*32 is a LANES multiple."""
+    assert lp.ndim == 2 and lp.shape[0] == 1
+    assert lp.shape[1] % BLOCK_C == 0 and lp.shape[1] == vals.shape[0]
+    Cp = lp.shape[1]
+    D = vals.shape[1]
+    Lp = -(-cap_pull // LANES) * LANES
+    Csp = -(-cap_server // LANES) * LANES
+    Wp = Csp // BITS
+    return pl.pallas_call(
+        functools.partial(_push_kernel, cap_server=cap_server,
+                          cap_pull=cap_pull),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, Cp), lambda i: (0, 0)),
+            pl.BlockSpec((Cp, D), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Lp), lambda i: (0, 0)),
+            pl.BlockSpec((Lp, D), lambda i: (0, 0)),
+            pl.BlockSpec((1, Wp), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, Lp), jnp.int32),
+            jax.ShapeDtypeStruct((Lp, D), vals.dtype),
+            jax.ShapeDtypeStruct((1, Wp), jnp.uint32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lp, vals)
+
+
+def _pull_kernel(words_ref, lpos_ref, *, cap_server: int, cap_pull: int):
+    w = words_ref[...]                                    # [1, Wp] uint32
+    Wp = w.shape[1]
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (Wp, BITS), 1)
+    bits = ((w[0][:, None] >> lane) & jnp.uint32(1)).astype(jnp.int32)
+    m = bits.reshape(Wp * BITS)                           # [Wp*32]
+    col = jax.lax.broadcasted_iota(jnp.int32, (Wp * BITS, 1), 0)[:, 0]
+    live = (m == 1) & (col < cap_server)                  # trim pad bits
+    pos = jnp.cumsum(live.astype(jnp.int32)) - 1
+    nnz = jnp.sum(live.astype(jnp.int32))
+    Lp = lpos_ref.shape[1]
+    jcol = jax.lax.broadcasted_iota(jnp.int32, (Wp * BITS, Lp), 1)
+    hit = live[:, None] & (pos[:, None] == jcol)          # [Wp*32, Lp]
+    comp = jnp.sum(jnp.where(hit, col[:, None], 0), axis=0)
+    kept = jnp.minimum(nnz, cap_pull)
+    lane_j = jax.lax.broadcasted_iota(jnp.int32, (1, Lp), 1)
+    lpos_ref[...] = jnp.where(lane_j < kept, comp[None, :], EMPTY)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap_server", "cap_pull", "interpret"))
+def zen_commit_pull_fused(words: jnp.ndarray, *, cap_server: int,
+                          cap_pull: int, interpret: bool = True):
+    """words uint32 [n, Wp] (per-server gathered bitmaps, Wp*32 a LANES
+    multiple) -> lpos int32 [n, Lp]: each row's set-bit positions below
+    ``cap_server``, compacted ascending and EMPTY-padded, first
+    ``cap_pull`` kept.  Lp = cap_pull rounded up to LANES."""
+    assert words.ndim == 2 and (words.shape[1] * BITS) % LANES == 0
+    n, Wp = words.shape
+    Lp = -(-cap_pull // LANES) * LANES
+    return pl.pallas_call(
+        functools.partial(_pull_kernel, cap_server=cap_server,
+                          cap_pull=cap_pull),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, Wp), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, Lp), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, Lp), jnp.int32)],
+        interpret=interpret,
+    )(words)[0]

@@ -74,6 +74,12 @@ def main():
                          "Missing file: CostCalibrator runs once on this "
                          "machine and writes it.  Also produced by "
                          "`python -m repro.core.costmodel`")
+    ap.add_argument("--no-fused-commit", action="store_true",
+                    help="run zen's commit stage as the pre-fusion "
+                         "dispatch chain (scatter-add -> compact -> "
+                         "bitmap-encode / unpack -> decode) instead of "
+                         "the fused push/pull megakernels (DESIGN.md "
+                         "§14); bit-identical output, A/B-timing knob")
     ap.add_argument("--replan-every", type=int, default=0,
                     help="adaptive density control: every N steps compare "
                          "choose_scheme on the MEASURED post-compression "
@@ -111,7 +117,8 @@ def main():
                         bucket_bytes=args.bucket_bytes,
                         compress=args.compress,
                         alpha_beta=args.alpha_beta,
-                        calib_file=args.calib_file),
+                        calib_file=args.calib_file,
+                        fused_commit=not args.no_fused_commit),
         zero1=not args.no_zero1)
     prog = build_program(cfg, mesh, tcfg)
     attach_train(prog, args.seq_len, args.global_batch)

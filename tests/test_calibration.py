@@ -173,6 +173,19 @@ def test_encode_us_lookup_scales_linearly_and_dense_is_free():
     assert ident.beta_us_per_word(1 << 20) == 1.0
 
 
+def test_commit_us_lookup_mirrors_encode_us():
+    """commit_us prices like encode_us: zen-only, log-nearest entry,
+    linear in size, 0 on the identity table (degeneracy preserved)."""
+    table = cm.CalibrationTable(entries=[dict(
+        backend="xla", size=1 << 10, density=0.01, n=4,
+        encode_us=10.0, commit_us=40.0, zen_us=60.0, dense_us=50.0)])
+    assert table.commit_us("dense", 1 << 10, 0.01) == 0.0
+    assert table.commit_us("zen", 1 << 10, 0.01) == 40.0
+    assert table.commit_us("zen", 1 << 11, 0.01) == pytest.approx(80.0)
+    ident = cm.CalibrationTable.identity()
+    assert ident.commit_us("zen", 1 << 20, 0.01) == 0.0
+
+
 def test_nearest_lookup_prefers_closest_log_point():
     table = cm.CalibrationTable(entries=[
         dict(backend="xla", size=1 << 10, density=0.01, n=4,
@@ -207,6 +220,13 @@ def test_version_mismatch_rejected(tmp_path):
     path.write_text(json.dumps({"version": 999, "entries": []}))
     with pytest.raises(ValueError, match="version"):
         cm.CalibrationTable.load(path)
+    # v1 tables carried the clamped-residual commit_us — semantically
+    # different numbers under the same key, so they must be rejected too
+    # (not silently reinterpreted as direct measurements)
+    assert cm._CALIB_VERSION == 2
+    path.write_text(json.dumps({"version": 1, "entries": []}))
+    with pytest.raises(ValueError, match="version"):
+        cm.CalibrationTable.load(path)
 
 
 def test_cost_calibrator_measures_and_round_trips(tmp_path):
@@ -220,7 +240,9 @@ def test_cost_calibrator_measures_and_round_trips(tmp_path):
         assert key in e, key
     assert e["encode_us"] > 0.0
     assert e["dense_us"] > 0.0
-    assert e["commit_us"] >= 0.0
+    # v2: commit_us is a direct measurement of a real jitted zen_commit
+    # run — unlike the v1 clamped residual it can never be exactly 0
+    assert e["commit_us"] > 0.0
     path = tmp_path / "measured.json"
     table.save(path)
     assert cm.CalibrationTable.load(path).entries == table.entries

@@ -1,0 +1,256 @@
+"""Kernel-parity matrix for the fused Zen commit (DESIGN.md §14).
+
+The commit-side counterpart of tests/test_zen_encode_fused.py.  The
+contract: the fused commit push (server aggregation + mask/compact +
+value gather + bitmap pack in one dispatch) and the fused pull decode
+(batched bitmap unpack + row compaction in one dispatch) — megakernel on
+TPU, its interpret-mode emulation, and the single-executable XLA
+composition the dispatch layer uses off-TPU — are BIT-EXACT against both
+oracles:
+
+  * ``zen_commit_push_unfused`` / ``zen_commit_pull_unfused``: the
+    pre-fusion dispatch chains (scatter-add kernel + XLA compaction +
+    bitmap-pack kernel; bitmap-unpack kernel + XLA compaction), and
+  * ``ref.zen_commit_push_ref`` / ``ref.zen_commit_pull_ref``: the
+    pure-XLA reference compositions.
+
+The matrix covers density {0.01, 0.1, 1.0} x dtype {f32, bf16} at the
+``schemes.zen_sync`` level and overflow-edge buffer layouts at the ops
+level (undersized cap_pull: every route must agree on WHICH server rows
+survive and HOW MANY overflow).  The collision-free final apply rides on
+the disjoint-partition invariant (Thm. 2), property-tested here: the
+decoded targets are globally unique, so ``.at[].set`` == ``.at[].add``
+into zeros.  CI runs this as part of the ``kernel-parity`` job.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics, schemes
+from repro.core.hashing import EMPTY, hash_mod
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def _push_inputs(cap_server: int, C: int, density: float, d=None, seed=0):
+    """Synthetic post-all_to_all commit input: server-local positions in
+    [0, cap_server) plus sentinel rows (EMPTY positions map to
+    cap_server, exactly what ``zen_commit`` feeds the kernel), values
+    integer-valued so bf16 sums are exact."""
+    rng = np.random.default_rng(seed)
+    lp = rng.integers(0, cap_server, size=C).astype(np.int32)
+    dead = rng.random(C) >= density
+    lp[dead] = cap_server
+    shape = (C,) if d is None else (C, d)
+    vals = np.round(rng.standard_normal(shape) * 8).astype(np.float32)
+    vals[dead] = 0
+    return jnp.asarray(lp), jnp.asarray(vals)
+
+
+def _push_arms(lp, vals, cap_server, cap_pull):
+    """All four commit-push routes: fused dispatch (XLA composition
+    off-TPU), forced interpret-mode megakernel, pre-fusion chain,
+    pure-XLA reference."""
+    return {
+        "fused": kops.zen_commit_push_fused_op(
+            lp, vals, cap_server=cap_server, cap_pull=cap_pull),
+        "kernel": kops.zen_commit_push_fused_op(
+            lp, vals, cap_server=cap_server, cap_pull=cap_pull,
+            force_kernel=True),
+        "unfused": kops.zen_commit_push_unfused(
+            lp, vals, cap_server=cap_server, cap_pull=cap_pull),
+        "ref": kref.zen_commit_push_ref(lp, vals, cap_server, cap_pull),
+    }
+
+
+def _assert_push_parity(arms: dict) -> int:
+    lpos0, vals0, bm0, ovf0 = arms["ref"]
+    for name in ("fused", "kernel", "unfused"):
+        lpos, vals, bm, ovf = arms[name]
+        np.testing.assert_array_equal(
+            np.asarray(lpos), np.asarray(lpos0), err_msg=f"{name}: lpos")
+        np.testing.assert_array_equal(
+            np.asarray(vals), np.asarray(vals0), err_msg=f"{name}: vals")
+        np.testing.assert_array_equal(
+            np.asarray(bm), np.asarray(bm0), err_msg=f"{name}: bitmap")
+        assert int(np.asarray(ovf)) == int(np.asarray(ovf0)), \
+            f"{name}: overflow"
+    return int(np.asarray(ovf0))
+
+
+# ---------------------------------------------------------------------------
+# ops-level matrix: push and pull routes, plus the overflow edge
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d", [None, 4], ids=["flat", "rows"])
+@pytest.mark.parametrize("cap_server,cap_pull,C,density", [
+    (200, 96, 600, 0.05),
+    (512, 192, 1024, 0.3),
+    (96, 96, 256, 1.0),            # every candidate live, ample memory
+])
+def test_push_parity_matrix(cap_server, cap_pull, C, density, d):
+    lp, vals = _push_inputs(cap_server, C, density, d)
+    _assert_push_parity(_push_arms(lp, vals, cap_server, cap_pull))
+
+
+@pytest.mark.parametrize("cap_server,cap_pull,C,density", [
+    (256, 16, 512, 0.5),           # aggregated nnz >> pull capacity
+    (100, 8, 300, 1.0),            # unaligned caps, total saturation
+])
+def test_push_parity_overflow_edge(cap_server, cap_pull, C, density):
+    """Undersized cap_pull: the compaction truncates, and every route
+    must agree on the surviving prefix AND the overflow count — the edge
+    where a fused reimplementation is easiest to get subtly wrong."""
+    lp, vals = _push_inputs(cap_server, C, density)
+    total = _assert_push_parity(_push_arms(lp, vals, cap_server, cap_pull))
+    assert total > 0, "edge config no longer overflows; shrink cap_pull"
+
+
+@pytest.mark.parametrize("cap_server,cap_pull", [
+    (200, 96),
+    (1000, 64),                    # bitmap word pad spans several lanes
+    (64, 64),
+])
+def test_pull_parity_matrix(cap_server, cap_pull):
+    rng = np.random.default_rng(5)
+    n = 4
+    W = -(-cap_server // 32)
+    words = jnp.asarray(
+        rng.integers(0, 1 << 32, size=(n, W), dtype=np.uint64)
+        .astype(np.uint32))
+    arms = {
+        "fused": kops.zen_commit_pull_fused_op(words, cap_server, cap_pull),
+        "kernel": kops.zen_commit_pull_fused_op(words, cap_server, cap_pull,
+                                                force_kernel=True),
+        "unfused": kops.zen_commit_pull_unfused(words, cap_server, cap_pull),
+        "ref": kref.zen_commit_pull_ref(words, cap_server, cap_pull),
+    }
+    base = np.asarray(arms["ref"])
+    for name in ("fused", "kernel", "unfused"):
+        np.testing.assert_array_equal(np.asarray(arms[name]), base,
+                                      err_msg=name)
+
+
+def test_batched_coo_reduce_backend_parity():
+    """The hoisted shared aggregation primitive: pallas (sequential-grid
+    RMW kernel) == xla (flattened .at[].add) bit-for-bit, EMPTY and
+    out-of-range rows dropped, any leading idx shape."""
+    rng = np.random.default_rng(9)
+    for d in (None, 3):
+        idx = rng.integers(0, 140, size=(4, 64)).astype(np.int32)
+        idx[rng.random((4, 64)) < 0.25] = EMPTY
+        shape = (4, 64) if d is None else (4, 64, d)
+        vals = np.round(rng.standard_normal(shape) * 8).astype(np.float32)
+        out_shape = (128,) if d is None else (128, d)
+        out = jnp.zeros(out_shape, jnp.float32)
+        x = kops.batched_coo_reduce_op(out, jnp.asarray(idx),
+                                       jnp.asarray(vals))
+        p = kops.batched_coo_reduce_op(out, jnp.asarray(idx),
+                                       jnp.asarray(vals), backend="pallas")
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(p))
+        # indices >= len(out) (but != EMPTY) are dropped, not wrapped
+        assert float(np.asarray(x)[:100].sum()) != 0.0
+
+
+# ---------------------------------------------------------------------------
+# Thm. 2: the disjoint-partition invariant behind the collision-free apply
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,n,key", [(1 << 12, 4, 0), (4096, 8, 3),
+                                     (3000, 8, 7)])
+def test_disjoint_partition_invariant(M, n, key):
+    """perm[offsets[p(g)] + local_pos[g]] == g for every global index g:
+    servers own non-overlapping ranges of the permutation, so the decode
+    targets of distinct live (server, position) pairs never collide —
+    the license for ``_scatter_unique``'s combiner-free apply."""
+    lo = schemes.make_zen_layout(M, n, density_budget=0.1, key=key)
+    g = np.arange(M)
+    p = np.asarray(hash_mod(jnp.asarray(g, jnp.int32), lo.seeds[0], n))
+    recovered = lo.perm[lo.offsets[p] + lo.local_pos]
+    np.testing.assert_array_equal(recovered, g)
+    # offsets partition [0, M): ranges are disjoint and cover everything
+    assert lo.offsets[0] == 0 and lo.offsets[-1] == M
+    assert (np.diff(lo.offsets) >= 0).all()
+
+
+def test_scatter_unique_equals_scatter_add_on_decode_stream():
+    """On a globally-unique target stream (what the zen decode produces),
+    the combiner-free set-scatter equals add-into-zeros exactly."""
+    rng = np.random.default_rng(11)
+    M = 4096
+    tgt = rng.choice(M, size=512, replace=False).astype(np.int32)
+    tgt[rng.random(512) < 0.2] = EMPTY
+    vals = np.round(rng.standard_normal(512) * 256).astype(np.float32) / 256
+    out0 = jnp.zeros(M, jnp.float32)
+    a = schemes._scatter_add(out0, jnp.asarray(tgt), jnp.asarray(vals))
+    s = schemes._scatter_unique(out0, jnp.asarray(tgt), jnp.asarray(vals))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(s))
+
+
+# ---------------------------------------------------------------------------
+# schemes-level matrix: dtype x density, full zen_sync through the fused
+# commit — values, wire words and overflow all bit-exact
+# ---------------------------------------------------------------------------
+
+def _integer_workers(seed, n, m, density, dtype):
+    """Integer-valued worker gradients: sums across workers stay exactly
+    representable even in bf16, so bit-exact cross-route comparison is
+    meaningful for both wire dtypes."""
+    key = jax.random.PRNGKey(seed)
+    masks = metrics.synth_sparse_masks(key, n, m, density)
+    vals = jnp.round(jax.random.normal(key, (n, m)) * 8)
+    return (vals * masks).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("density", [0.01, 0.1, 1.0])
+def test_schemes_zen_sync_fused_commit_parity(dtype, density):
+    """pallas fused-commit == pallas unfused == xla on the synced values,
+    the claimed wire words and the overflow count, at every density and
+    in both wire dtypes."""
+    n, m = 4, 1 << 12
+    vals = _integer_workers(2, n, m, density, dtype)
+    lo = schemes.make_zen_layout(m, n,
+                                 density_budget=min(1.0, 4 * density))
+    base = schemes.simulate(schemes.zen_sync, vals, layout=lo,
+                            backend="xla")
+    for fc, tag in ((False, "pallas-unfused"), (True, "pallas-fused")):
+        out, st = schemes.simulate(schemes.zen_sync, vals, layout=lo,
+                                   backend="pallas", fused_commit=fc)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(base[0]), err_msg=tag)
+        assert out.dtype == dtype, tag
+        np.testing.assert_array_equal(
+            np.asarray(st.sent_words), np.asarray(base[1].sent_words),
+            err_msg=f"{tag}: sent_words")
+        np.testing.assert_array_equal(
+            np.asarray(st.overflow), np.asarray(base[1].overflow),
+            err_msg=f"{tag}: overflow")
+
+
+@pytest.mark.parametrize("fused_commit", [False, True],
+                         ids=["unfused", "fused"])
+def test_schemes_zen_coo_pull_ablation_backend_parity(fused_commit):
+    """The COO-pull ablation (use_hash_bitmap=False) through the pallas
+    kernel dispatch: previously only the XLA route had tier-1 coverage.
+    Both commit routes must match xla bitwise — the ablation changes
+    traffic accounting, never values or dispatch correctness."""
+    n, m = 4, 2048
+    vals = _integer_workers(4, n, m, 0.05, jnp.float32)
+    lo = schemes.make_zen_layout(m, n, density_budget=0.2)
+    base = schemes.simulate(schemes.zen_sync, vals, layout=lo,
+                            backend="xla", use_hash_bitmap=False)
+    out, st = schemes.simulate(schemes.zen_sync, vals, layout=lo,
+                               backend="pallas", use_hash_bitmap=False,
+                               fused_commit=fused_commit)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base[0]))
+    np.testing.assert_array_equal(np.asarray(st.sent_words),
+                                  np.asarray(base[1].sent_words))
+    np.testing.assert_array_equal(np.asarray(st.overflow),
+                                  np.asarray(base[1].overflow))
+    # and the psum oracle holds
+    np.testing.assert_allclose(np.asarray(out)[0],
+                               np.asarray(vals.sum(0)), atol=0)
